@@ -1,0 +1,61 @@
+"""Paper Figures 3 & 4 + Section VI-A: reordering's effect on BCSR block
+count and per-row load balance, on the SuiteSparse-pattern suite.
+
+Claims validated (paper numbers in brackets, scaled suite):
+  * row reordering reduces blocks on most matrices [6/9], up to ~2.5x;
+  * on band-structured inputs (conf5_4-8x8) Jaccard may INCREASE blocks;
+  * mip1-class: modest block reduction but large blocks-per-row stddev
+    reduction [8.4x] — the load-balance win;
+  * column permutation adds little [Section VI-F].
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import bcsr as bcsr_lib
+from repro.core import reorder, topology
+
+BLOCK = (16, 16)
+
+
+def stats_for(csr):
+    a = bcsr_lib.from_scipy(csr, BLOCK)
+    bpr = a.blocks_per_row()
+    return a.nnzb, float(bpr.std())
+
+
+def run():
+    rows = []
+    reduced = 0
+    total = 0
+    for name in topology.SUITE:
+        csr = topology.suite_matrix(name)
+        nnzb0, std0 = stats_for(csr)
+        perm = reorder.jaccard_rows(csr, block_w=BLOCK[1], tau=0.7,
+                                    max_candidates=4096)
+        csr_r = reorder.apply_perm(csr, perm)
+        nnzb_r, std_r = stats_for(csr_r)
+        rperm, cperm = None, None
+        # row+col ablation on the smaller matrices only (host-side cost)
+        if csr.shape[0] <= 8192:
+            rp, cp = reorder.jaccard_rows_cols(csr, BLOCK, tau=0.7)
+            csr_rc = reorder.apply_perm(csr, rp, cp)
+            nnzb_rc, _ = stats_for(csr_rc)
+        else:
+            nnzb_rc = nnzb_r
+        total += 1
+        if nnzb_r < nnzb0:
+            reduced += 1
+        rows.append((f"fig3/{name}", 0,
+                     f"nnzb0={nnzb0};nnzb_row={nnzb_r};nnzb_rowcol={nnzb_rc};"
+                     f"reduction={nnzb0/max(nnzb_r,1):.2f}x;"
+                     f"bpr_std {std0:.1f}->{std_r:.1f}"))
+    rows.append(("fig3/summary_reduced_fraction", 0,
+                 f"{reduced}/{total} matrices improved by row reordering"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

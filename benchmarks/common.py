@@ -1,0 +1,63 @@
+"""Shared benchmark utilities.
+
+Two measurement regimes (the container is CPU-only, TPU v5e is the target):
+  * measured  — CPU wall-clock of the jitted XLA implementations (relative
+    comparisons between algorithmic arms are meaningful);
+  * modeled   — paper Eq.1 with the TPU block-roofline T_e
+    (``core.perf_model``), reported as effective GFLOP/s exactly like the
+    paper's figures.
+Matrix sizes are scaled ~4-8x down from the paper's (single CPU core).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.core import bcsr as bcsr_lib
+from repro.core import perf_model as pm
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-clock seconds of fn(*args) (jax arrays blocked)."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def modeled_bcsr_time(a: bcsr_lib.BCSR, n: int) -> float:
+    h, w = a.block
+    return pm.spmm_model_time(a.nnzb, h, w, n)
+
+
+def modeled_dense_time(shape, n: int) -> float:
+    return pm.dense_gemm_time(shape[0], shape[1], n)
+
+
+def modeled_csr_time(nnz: int, n: int) -> float:
+    return pm.csr_spmm_time(nnz, n)
+
+
+def modeled_batched_spmv_time(nnz: int, n: int) -> float:
+    """DASP arm: SpMM as n independent SpMVs (the paper's comparison mode).
+    Each SpMV pays the full matrix stream."""
+    return n * pm.csr_spmm_time(nnz, 1, gather_overhead=2.0)
+
+
+def effective_gflops(nnz: int, n: int, t: float) -> float:
+    return pm.spmm_effective_gflops(nnz, n, t)
+
+
+def emit(rows, header=("name", "us_per_call", "derived")):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))

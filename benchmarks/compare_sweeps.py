@@ -1,0 +1,37 @@
+"""Baseline vs optimized sweep comparison (EXPERIMENTS.md §Optimized sweep).
+
+  PYTHONPATH=src python -m benchmarks.compare_sweeps \
+      results_singlepod.json results_singlepod_optimized.json
+"""
+import json
+import sys
+
+
+def main(argv):
+    base = {(r["arch"], r["shape"]): r
+            for r in json.load(open(argv[0])) if r.get("status") == "ok"}
+    opt = {(r["arch"], r["shape"]): r
+           for r in json.load(open(argv[1])) if r.get("status") == "ok"}
+    print("| arch | shape | step before (ms) | step after (ms) | speedup | "
+          "mem before/after (GiB) |")
+    print("|---|---|---|---|---|---|")
+    gains = []
+    for k in sorted(base):
+        if k not in opt:
+            continue
+        rb, ro_ = base[k]["roofline"], opt[k]["roofline"]
+        tb = max(rb["t_compute"], rb["t_memory"], rb["t_collective"]) * 1e3
+        ta = max(ro_["t_compute"], ro_["t_memory"], ro_["t_collective"]) * 1e3
+        mb = base[k]["memory"]["peak_bytes_per_device"] / 2**30
+        ma = opt[k]["memory"]["peak_bytes_per_device"] / 2**30
+        gains.append(tb / ta)
+        print(f"| {k[0]} | {k[1]} | {tb:.1f} | {ta:.1f} | {tb/ta:.2f}x | "
+              f"{mb:.1f} / {ma:.1f} |")
+    import math
+    geo = math.exp(sum(math.log(g) for g in gains) / len(gains))
+    print(f"\ngeomean step-time speedup across {len(gains)} cells: "
+          f"{geo:.2f}x")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

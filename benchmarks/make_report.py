@@ -1,0 +1,77 @@
+"""Generate the EXPERIMENTS.md roofline/dry-run tables from dryrun JSONs.
+
+  PYTHONPATH=src python -m benchmarks.make_report \
+      results_singlepod.json results_multipod.json > tables.md
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def _gib(b):
+    return b / 2 ** 30
+
+
+def fmt_roofline_table(records):
+    lines = [
+        "| arch | shape | Tc (ms) | Tm (ms) | Tx (ms) | bottleneck | "
+        "mem/dev (GiB) | MODEL_FLOPS/HLO | peak frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        if r.get("status") == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"SKIP (noted) | — | — | — |")
+            continue
+        if r.get("status") == "error":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"ERROR | — | — | — |")
+            continue
+        ro = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{ro['t_compute']*1e3:.1f} | {ro['t_memory']*1e3:.1f} | "
+            f"{ro['t_collective']*1e3:.1f} | {ro['bottleneck']} | "
+            f"{_gib(r['memory']['peak_bytes_per_device']):.1f} | "
+            f"{ro['useful_ratio']:.2f} | {ro['peak_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def fmt_dryrun_table(records):
+    lines = [
+        "| arch | shape | mesh | status | compile (s) | bytes/dev (GiB) | "
+        "collectives |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | "
+                         f"{r.get('mesh','-')} | {r['status'].upper()} | — | "
+                         f"— | {r.get('reason', r.get('error',''))[:60]} |")
+            continue
+        coll = r["roofline"]["collectives"].get("counts", {})
+        cstr = " ".join(f"{k}:{v}" for k, v in sorted(coll.items()))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK | "
+            f"{r['compile_s']:.0f} | "
+            f"{_gib(r['memory']['peak_bytes_per_device']):.1f} | {cstr} |")
+    return "\n".join(lines)
+
+
+def main(argv):
+    for path in argv:
+        with open(path) as f:
+            records = json.load(f)
+        n_ok = sum(r.get("status") == "ok" for r in records)
+        n_skip = sum(r.get("status") == "skip" for r in records)
+        n_err = sum(r.get("status") == "error" for r in records)
+        print(f"\n## {path}: {n_ok} ok / {n_skip} skip / {n_err} error\n")
+        print(fmt_dryrun_table(records))
+        if "single" in path:
+            print("\n### Roofline terms (single-pod 16x16)\n")
+            print(fmt_roofline_table(records))
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

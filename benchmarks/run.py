@@ -1,0 +1,33 @@
+"""Benchmark runner — one module per paper table/figure.
+
+  fig2   — perf model T_tot = T_e*n_e + T_init fit (paper Fig. 2 / SIII)
+  fig3   — reordering block-count + load-balance effect (Figs. 3-4 / SVI-A)
+  fig8   — SuiteSparse-pattern suite throughput (Fig. 8 / Table I / SVI-B)
+  fig9   — band sparsity sweep, dense crossover (Fig. 9 / SVI-C)
+  fig10  — N scaling (Fig. 10 / SVI-D)
+  kernel — Pallas kernel roofline table + dc2 schedule study
+
+Prints ``name,us_per_call,derived`` CSV.  Roofline tables for the 40
+(arch x shape) cells come from ``repro.launch.dryrun`` (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_band_sweep, bench_kernels,
+                            bench_n_scaling, bench_perf_model,
+                            bench_reorder, bench_suitesparse_like)
+    t0 = time.time()
+    for mod in (bench_perf_model, bench_reorder, bench_suitesparse_like,
+                bench_band_sweep, bench_n_scaling, bench_kernels):
+        name = mod.__name__.split(".")[-1]
+        print(f"# === {name} ===", file=sys.stderr)
+        mod.run()
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

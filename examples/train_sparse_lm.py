@@ -1,0 +1,57 @@
+"""End-to-end driver: train a ~100M-param LM whose FFN weights are
+block-sparse (the paper's technique as a training feature) for a few hundred
+steps, with checkpointing.
+
+  PYTHONPATH=src python examples/train_sparse_lm.py --steps 150
+
+~100M params: d_model=768, 12 layers, vocab 32000, FFN 3072 at 30%
+block-density (block 32x32).  Loss should drop from ~10.4 to < 7 within
+~100 steps on the synthetic n-gram stream.
+"""
+import argparse
+import dataclasses
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.core.sparse_linear import SparsitySpec
+from repro.launch import mesh as mesh_lib
+from repro.optim import adamw
+from repro.train.loop import train
+
+import logging
+logging.basicConfig(level=logging.INFO,
+                    format="%(asctime)s %(message)s", datefmt="%H:%M:%S")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/smat_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="smat-ffn-100m", family="dense", layout="attn_mlp",
+        n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, head_dim=64,
+        d_ff=3072, vocab_size=32000,
+        ffn_sparsity=SparsitySpec(density=0.30, block=(32, 32),
+                                  backend="xla"),
+        dtype="float32",
+    )
+    print(f"params ~{cfg.param_count()/1e6:.0f}M "
+          f"(sparse FFN at {cfg.ffn_sparsity.density:.0%} block-density)")
+    shape = ShapeCell("train", "train", args.seq, args.batch)
+    mesh = mesh_lib.make_mesh((1, 1), ("data", "model"))
+    warmup = min(20, max(args.steps // 5, 1))
+    res = train(cfg, shape, mesh, total_steps=args.steps,
+                opt_cfg=adamw.AdamWConfig(lr=6e-4, warmup_steps=warmup,
+                                          total_steps=args.steps),
+                ckpt_dir=args.ckpt_dir, ckpt_every=50, log_every=10)
+    print(f"loss: {res.losses[0]:.3f} -> {res.losses[-1]:.3f} "
+          f"over {len(res.losses)} steps")
+    assert res.losses[-1] < res.losses[0]
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

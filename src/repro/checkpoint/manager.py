@@ -1,0 +1,178 @@
+"""Fault-tolerant checkpointing: async, atomic, mesh-agnostic.
+
+Layout:  <dir>/step_<N>/ {manifest.json, arrays.npz}
+  * atomic: written to step_<N>.tmp then os.rename'd — a crash mid-save never
+    corrupts the latest checkpoint.
+  * async: a single background thread drains a depth-1 queue (a save that is
+    still running skips the next request rather than stalling the step loop).
+  * mesh-agnostic / elastic: arrays are saved as full logical tensors with
+    their tree paths; ``restore`` re-shards onto WHATEVER mesh/shardings the
+    relaunch uses (device counts may differ — elastic scaling).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+# numpy's savez cannot store ml_dtypes (bfloat16, fp8, ...): view them as
+# raw unsigned ints and record the true dtype in the manifest
+_VIEW_AS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+            "float8_e5m2": np.uint8}
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _encode(arr: np.ndarray):
+    name = str(arr.dtype)
+    if name in _VIEW_AS:
+        return arr.view(_VIEW_AS[name]), name
+    return arr, name
+
+
+def _decode(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _VIEW_AS:
+        import ml_dtypes
+        return arr.view(getattr(ml_dtypes, dtype_name))
+    return arr
+
+
+def _unflatten_into(like, flat: Dict[str, np.ndarray]):
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    out = []
+    for path, leaf in leaves_with_path:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                f"expected {leaf.shape}")
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._q: "queue.Queue" = queue.Queue(maxsize=1)
+        self._async = async_save
+        self._err: Optional[BaseException] = None
+        if async_save:
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state: Dict[str, Any], block: bool = False):
+        """state: pytree dict, e.g. {"params": ..., "opt": ..., "step": N}."""
+        host_state = jax.tree.map(np.asarray, state)   # pull off device
+        if not self._async or block:
+            self._write(step, host_state)
+            return
+        try:
+            self._q.put_nowait((step, host_state))
+        except queue.Full:
+            pass  # previous save still running — skip (depth-1 policy)
+
+    def _worker(self):
+        while True:
+            step, state = self._q.get()
+            try:
+                self._write(step, state)
+            except BaseException as e:  # surfaced on next wait()
+                self._err = e
+
+    def _write(self, step: int, state):
+        import uuid
+        flat = _flatten(state)
+        # unique tmp dir: an async save and a blocking save of the same step
+        # must never collide (atomic rename publishes whichever finishes)
+        tmp = os.path.join(self.dir, f"step_{step:08d}.tmp-{uuid.uuid4().hex[:8]}")
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        os.makedirs(tmp, exist_ok=True)
+        encoded, dtypes = {}, {}
+        for k, v in flat.items():
+            encoded[k], dtypes[k] = _encode(v)
+        np.savez(os.path.join(tmp, "arrays.npz"), **encoded)
+        manifest = {
+            "step": step,
+            "leaves": {k: {"shape": list(v.shape), "dtype": dtypes[k]}
+                       for k, v in flat.items()},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def wait(self):
+        """Drain pending async saves (used before shutdown / asserts)."""
+        self._q.join() if False else None
+        while not self._q.empty():
+            import time
+            time.sleep(0.05)
+        # one extra beat to let an in-flight write finish
+        import time
+        time.sleep(0.05)
+        if self._err:
+            raise self._err
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and ".tmp" not in name:
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like, step: Optional[int] = None,
+                shardings=None) -> Tuple[Any, int]:
+        """Restore into the structure of ``like``; device_put with
+        ``shardings`` (a matching pytree) if given — this is the elastic
+        re-shard path."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            flat = {k: _decode(z[k], manifest["leaves"][k]["dtype"])
+                    for k in z.files}
+        state = _unflatten_into(like, flat)
+        if shardings is not None:
+            state = jax.tree.map(
+                lambda arr, s: jax.device_put(arr, s), state, shardings)
+        return state, step

@@ -1,0 +1,6 @@
+from repro.core.bcsr import (BCSR, from_csr, from_dense, from_scipy,
+                             random_bcsr, random_bcsr_exact)
+from repro.core.sparse_linear import (SparsitySpec, apply_sparse_linear,
+                                      init_sparse_linear,
+                                      sparse_linear_specs)
+from repro.core import reorder, topology, perf_model

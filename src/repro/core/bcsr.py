@@ -1,0 +1,278 @@
+"""BCSR (Blocked Compressed Sparse Row) format — the paper's core data structure.
+
+A sparse matrix ``A`` of logical shape ``(M, K)`` is tiled into dense blocks of
+shape ``(h, w)``; only blocks containing at least one nonzero are stored.  On
+GPU SMaT picks ``h x w`` to match the MMA instruction tile (16x8 for FP16
+m16n8k16).  On TPU the analogous choice is the MXU tile: ``h`` a multiple of
+the sublane pack (8 for f32 / 16 for bf16) and ``w`` a multiple of the 128-wide
+lane dimension.  The default production block is 128x128.
+
+Arrays (mirroring the paper's Figure 1, plus ``row_ids`` which the TPU
+nnz-streamed kernel prefetches):
+
+  vals     [nnzb, h, w]   dense block values (zero-padded)
+  col_ids  [nnzb]         block-column index of each block
+  row_ids  [nnzb]         block-row index of each block (sorted, row-major)
+  rowptr   [n_brows + 1]  CSR-style offsets into col_ids/vals per block-row
+
+The host-side representation is NumPy; ``device_arrays`` returns the pytree
+consumed by the kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+
+try:  # scipy is available in this environment; used for fast host conversion
+    import scipy.sparse as _sp
+except Exception:  # pragma: no cover
+    _sp = None
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclasses.dataclass
+class BCSR:
+    """Host-side blocked-CSR matrix (numpy)."""
+
+    vals: np.ndarray      # [nnzb, h, w]
+    col_ids: np.ndarray   # [nnzb] int32
+    row_ids: np.ndarray   # [nnzb] int32
+    rowptr: np.ndarray    # [n_brows + 1] int32
+    shape: Tuple[int, int]
+    block: Tuple[int, int]
+
+    # ------------------------------------------------------------------ stats
+    @property
+    def nnzb(self) -> int:
+        return int(self.vals.shape[0])
+
+    @property
+    def n_block_rows(self) -> int:
+        return _ceil_div(self.shape[0], self.block[0])
+
+    @property
+    def n_block_cols(self) -> int:
+        return _ceil_div(self.shape[1], self.block[1])
+
+    @property
+    def nnz(self) -> int:
+        return int(np.count_nonzero(self.vals))
+
+    @property
+    def padding_ratio(self) -> float:
+        """Fraction of stored values that are explicit zeros (paper's padding)."""
+        total = self.vals.size
+        return 1.0 - self.nnz / max(total, 1)
+
+    @property
+    def density(self) -> float:
+        return self.nnz / (self.shape[0] * self.shape[1])
+
+    def blocks_per_row(self) -> np.ndarray:
+        return np.diff(self.rowptr)
+
+    def block_bounds(self) -> Tuple[int, int]:
+        """Paper Eq. 2 bounds on n_e for this matrix's nnz."""
+        h, w = self.block
+        n, m = self.shape
+        nnz = self.nnz
+        lo = _ceil_div(nnz, h * w)
+        hi = min(_ceil_div(n, h) * _ceil_div(m, w), nnz)
+        return lo, hi
+
+    def stats(self) -> dict:
+        bpr = self.blocks_per_row()
+        lo, hi = self.block_bounds()
+        return {
+            "shape": self.shape,
+            "block": self.block,
+            "nnz": self.nnz,
+            "nnzb": self.nnzb,
+            "padding_ratio": self.padding_ratio,
+            "blocks_per_row_mean": float(bpr.mean()) if bpr.size else 0.0,
+            "blocks_per_row_std": float(bpr.std()) if bpr.size else 0.0,
+            "blocks_per_row_max": int(bpr.max()) if bpr.size else 0,
+            "n_e_lower_bound": lo,
+            "n_e_upper_bound": hi,
+        }
+
+    # ------------------------------------------------------------- conversion
+    def to_dense(self) -> np.ndarray:
+        h, w = self.block
+        M, K = self.shape
+        out = np.zeros((self.n_block_rows * h, self.n_block_cols * w),
+                       dtype=self.vals.dtype)
+        for s in range(self.nnzb):
+            i, j = int(self.row_ids[s]), int(self.col_ids[s])
+            out[i * h:(i + 1) * h, j * w:(j + 1) * w] = self.vals[s]
+        return out[:M, :K]
+
+    def transpose(self) -> "BCSR":
+        """Block-structure transpose (used for dX = A^T @ dY in the VJP)."""
+        order = np.lexsort((self.row_ids, self.col_ids))  # sort by (col, row)
+        t_vals = np.ascontiguousarray(
+            np.transpose(self.vals[order], (0, 2, 1)))
+        t_rows = self.col_ids[order].astype(np.int32)
+        t_cols = self.row_ids[order].astype(np.int32)
+        n_brows_t = self.n_block_cols
+        rowptr = np.zeros(n_brows_t + 1, dtype=np.int32)
+        np.add.at(rowptr, t_rows + 1, 1)
+        rowptr = np.cumsum(rowptr).astype(np.int32)
+        return BCSR(t_vals, t_cols, t_rows, rowptr,
+                    (self.shape[1], self.shape[0]),
+                    (self.block[1], self.block[0]))
+
+    def ensure_nonempty_rows(self) -> "BCSR":
+        """Pad so every block-row holds >= 1 block (required by the
+        nnz-streamed kernel so each output tile is visited/zeroed)."""
+        bpr = self.blocks_per_row()
+        empty = np.flatnonzero(bpr == 0)
+        if empty.size == 0:
+            return self
+        h, w = self.block
+        pad_vals = np.zeros((empty.size, h, w), dtype=self.vals.dtype)
+        vals = np.concatenate([self.vals, pad_vals], axis=0)
+        col_ids = np.concatenate([self.col_ids,
+                                  np.zeros(empty.size, np.int32)])
+        row_ids = np.concatenate([self.row_ids, empty.astype(np.int32)])
+        order = np.lexsort((col_ids, row_ids))
+        vals, col_ids, row_ids = vals[order], col_ids[order], row_ids[order]
+        rowptr = np.zeros(self.n_block_rows + 1, dtype=np.int32)
+        np.add.at(rowptr, row_ids + 1, 1)
+        rowptr = np.cumsum(rowptr).astype(np.int32)
+        return BCSR(vals, col_ids.astype(np.int32), row_ids.astype(np.int32),
+                    rowptr, self.shape, self.block)
+
+    def astype(self, dtype) -> "BCSR":
+        return dataclasses.replace(self, vals=self.vals.astype(dtype))
+
+    def device_arrays(self):
+        """The pytree handed to kernels: (vals, row_ids, col_ids, rowptr)."""
+        return self.vals, self.row_ids, self.col_ids, self.rowptr
+
+
+# ---------------------------------------------------------------- constructors
+def from_dense(a: np.ndarray, block: Tuple[int, int]) -> BCSR:
+    """Block a dense matrix, keeping only nonzero blocks."""
+    h, w = block
+    M, K = a.shape
+    nbr, nbc = _ceil_div(M, h), _ceil_div(K, w)
+    padded = np.zeros((nbr * h, nbc * w), dtype=a.dtype)
+    padded[:M, :K] = a
+    blocks = padded.reshape(nbr, h, nbc, w).transpose(0, 2, 1, 3)
+    mask = np.abs(blocks).sum(axis=(2, 3)) != 0  # [nbr, nbc]
+    row_ids, col_ids = np.nonzero(mask)
+    vals = np.ascontiguousarray(blocks[row_ids, col_ids])
+    rowptr = np.zeros(nbr + 1, dtype=np.int32)
+    np.add.at(rowptr, row_ids + 1, 1)
+    rowptr = np.cumsum(rowptr).astype(np.int32)
+    return BCSR(vals, col_ids.astype(np.int32), row_ids.astype(np.int32),
+                rowptr, (M, K), (h, w))
+
+
+def from_csr(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
+             shape: Tuple[int, int], block: Tuple[int, int]) -> BCSR:
+    """CSR -> BCSR, the paper's input path (Figure 1, left).
+
+    Uses a scipy round-trip for speed on large host matrices; falls back to a
+    pure-numpy bucketing implementation when scipy is unavailable.
+    """
+    h, w = block
+    M, K = shape
+    nbr, nbc = _ceil_div(M, h), _ceil_div(K, w)
+    if _sp is not None:
+        csr = _sp.csr_matrix((data, indices, indptr), shape=shape)
+        coo = csr.tocoo()
+        brow = (coo.row // h).astype(np.int64)
+        bcol = (coo.col // w).astype(np.int64)
+        bid = brow * nbc + bcol
+        uniq, inv = np.unique(bid, return_inverse=True)
+        nnzb = uniq.size
+        vals = np.zeros((nnzb, h, w), dtype=data.dtype)
+        vals[inv, coo.row % h, coo.col % w] = coo.data
+        row_ids = (uniq // nbc).astype(np.int32)
+        col_ids = (uniq % nbc).astype(np.int32)
+    else:  # pragma: no cover - scipy present in target env
+        rows = np.repeat(np.arange(M), np.diff(indptr))
+        brow = rows // h
+        bcol = indices // w
+        bid = brow * nbc + bcol
+        uniq, inv = np.unique(bid, return_inverse=True)
+        nnzb = uniq.size
+        vals = np.zeros((nnzb, h, w), dtype=data.dtype)
+        vals[inv, rows % h, indices % w] = data
+        row_ids = (uniq // nbc).astype(np.int32)
+        col_ids = (uniq % nbc).astype(np.int32)
+    rowptr = np.zeros(nbr + 1, dtype=np.int32)
+    np.add.at(rowptr, row_ids + 1, 1)
+    rowptr = np.cumsum(rowptr).astype(np.int32)
+    return BCSR(vals, col_ids, row_ids, rowptr, shape, block)
+
+
+def from_scipy(mat, block: Tuple[int, int]) -> BCSR:
+    csr = mat.tocsr()
+    return from_csr(csr.indptr, csr.indices, csr.data, csr.shape, block)
+
+
+def random_bcsr_exact(key: int, shape: Tuple[int, int],
+                      block: Tuple[int, int], nnzb: int,
+                      dtype=np.float32) -> BCSR:
+    """Random block-sparse matrix with EXACTLY ``nnzb`` blocks, every
+    block-row and block-col covered (no padding entries needed).  Used for
+    scan-stacked sparse layers where all layers must share nnzb.
+    """
+    rng = np.random.default_rng(key)
+    h, w = block
+    nbr, nbc = _ceil_div(shape[0], h), _ceil_div(shape[1], w)
+    assert nnzb >= max(nbr, nbc), "need >= one block per row and col"
+    assert nnzb <= nbr * nbc
+    # cover every row and col first (diagonal-ish assignment)
+    base_rows = np.arange(max(nbr, nbc)) % nbr
+    base_cols = np.arange(max(nbr, nbc)) % nbc
+    chosen = set(zip(base_rows.tolist(), base_cols.tolist()))
+    while len(chosen) < nnzb:
+        need = nnzb - len(chosen)
+        rr = rng.integers(0, nbr, size=need * 2)
+        cc = rng.integers(0, nbc, size=need * 2)
+        for r, c in zip(rr.tolist(), cc.tolist()):
+            if len(chosen) >= nnzb:
+                break
+            chosen.add((r, c))
+    pairs = np.array(sorted(chosen), dtype=np.int64)[:nnzb]
+    # note: sorted(set) may drop below nnzb if duplicates; loop above prevents
+    row_ids = pairs[:, 0].astype(np.int32)
+    col_ids = pairs[:, 1].astype(np.int32)
+    vals = (rng.standard_normal((nnzb, h, w)) / math.sqrt(w)).astype(dtype)
+    rowptr = np.zeros(nbr + 1, dtype=np.int32)
+    np.add.at(rowptr, row_ids + 1, 1)
+    rowptr = np.cumsum(rowptr).astype(np.int32)
+    return BCSR(vals, col_ids, row_ids, rowptr, shape, block)
+
+
+def random_bcsr(key: int, shape: Tuple[int, int], block: Tuple[int, int],
+                block_density: float, dtype=np.float32,
+                fill_density: float = 1.0) -> BCSR:
+    """Random block-sparse matrix: a ``block_density`` fraction of blocks are
+    nonzero; within each block a ``fill_density`` fraction of entries are
+    nonzero (fill < 1 models the paper's padding)."""
+    rng = np.random.default_rng(key)
+    h, w = block
+    nbr, nbc = _ceil_div(shape[0], h), _ceil_div(shape[1], w)
+    mask = rng.random((nbr, nbc)) < block_density
+    row_ids, col_ids = np.nonzero(mask)
+    nnzb = row_ids.size
+    vals = (rng.standard_normal((nnzb, h, w)) / math.sqrt(w)).astype(dtype)
+    if fill_density < 1.0:
+        keep = rng.random((nnzb, h, w)) < fill_density
+        vals = np.where(keep, vals, 0).astype(dtype)
+    rowptr = np.zeros(nbr + 1, dtype=np.int32)
+    np.add.at(rowptr, row_ids.astype(np.int32) + 1, 1)
+    rowptr = np.cumsum(rowptr).astype(np.int32)
+    return BCSR(vals, col_ids.astype(np.int32), row_ids.astype(np.int32),
+                rowptr, shape, block)

@@ -1,0 +1,116 @@
+"""BlockSparseLinear — the paper's technique as a first-class model layer.
+
+A linear layer ``y = x @ W^T (+ b)`` whose weight ``W [out, in]`` is stored in
+BCSR and multiplied with the SMaT kernels: the forward pass is
+``C = W @ x^T`` (sparse x dense SpMM), the backward pass uses the transposed
+block structure (dx) and the SDDMM kernel (dW) — all through
+``kernels.ops.spmm``'s custom VJP.
+
+Patterns are generated with exact nnzb and full row/col coverage so layers
+can be stacked along a scan axis (all leaves share shapes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bcsr as bcsr_lib
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsitySpec:
+    """Config for a block-sparse weight (the paper's technique toggle)."""
+    density: float = 0.1            # fraction of nonzero blocks
+    block: Tuple[int, int] = (128, 128)
+    backend: str = "pallas"         # pallas | xla | dense
+    bn: int = 512
+    interpret: bool = False
+
+
+def _nnzb_for(spec: SparsitySpec, out_dim: int, in_dim: int) -> int:
+    h, w = spec.block
+    nbr, nbc = -(-out_dim // h), -(-in_dim // w)
+    nnzb = int(round(spec.density * nbr * nbc))
+    nnzb = max(nnzb, max(nbr, nbc))
+    # round up to a multiple of 16 so the nnz dimension shards over the
+    # `model` mesh axis (dropped to the cap when the matrix is tiny)
+    nnzb = min(-(-nnzb // 16) * 16, nbr * nbc)
+    return nnzb
+
+
+def init_sparse_linear(key: int, in_dim: int, out_dim: int,
+                       spec: SparsitySpec, dtype=jnp.bfloat16):
+    """Returns (params, meta): params is a pytree of device arrays (vals is
+    the trainable leaf; index arrays ride along), meta is static."""
+    a = bcsr_lib.random_bcsr_exact(
+        key, (out_dim, in_dim), spec.block, _nnzb_for(spec, out_dim, in_dim),
+        dtype=np.float32)
+    arrays, meta = ops.prepare_sparse(a, dtype=dtype)
+    params = {
+        "vals": arrays.vals,
+        "row_ids": arrays.row_ids,
+        "col_ids": arrays.col_ids,
+        "real_mask": arrays.real_mask,
+        "t_perm": arrays.t_perm,
+        "t_row_ids": arrays.t_row_ids,
+        "t_col_ids": arrays.t_col_ids,
+    }
+    return params, meta
+
+
+def sparse_linear_specs(in_dim: int, out_dim: int, spec: SparsitySpec,
+                        dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree (dry-run path — no host work, no allocation)."""
+    h, w = spec.block
+    nnzb = _nnzb_for(spec, out_dim, in_dim)
+    nbr, nbc = -(-out_dim // h), -(-in_dim // w)
+    sds = jax.ShapeDtypeStruct
+    params = {
+        "vals": sds((nnzb, h, w), dtype),
+        "row_ids": sds((nnzb,), jnp.int32),
+        "col_ids": sds((nnzb,), jnp.int32),
+        "real_mask": sds((nnzb,), jnp.bool_),
+        "t_perm": sds((nnzb,), jnp.int32),
+        "t_row_ids": sds((nnzb,), jnp.int32),
+        "t_col_ids": sds((nnzb,), jnp.int32),
+    }
+    meta = ops.SparseMeta(shape=(out_dim, in_dim), block=spec.block,
+                          n_block_rows=nbr, n_block_cols=nbc,
+                          nnzb=nnzb, nnzb_t=nnzb)
+    return params, meta
+
+
+def apply_sparse_linear(params: dict, meta: ops.SparseMeta, x: jnp.ndarray,
+                        spec: SparsitySpec) -> jnp.ndarray:
+    """y[..., out] = x[..., in] @ W^T via C = W @ x^T.
+
+    The token dim of the SpMM is sharded over ALL mesh axes (weights are
+    replicated — see launch/sharding.py BCSR rules): each chip streams the
+    full nonzero-block list against its token slice, which is exactly the
+    paper's kernel with B = the local activation panel (§Perf C2)."""
+    from repro.launch.constrain import BATCH, MODEL, constrain
+    arrays = ops.SparseArrays(
+        vals=params["vals"], row_ids=params["row_ids"],
+        col_ids=params["col_ids"], real_mask=params["real_mask"],
+        t_perm=params["t_perm"], t_row_ids=params["t_row_ids"],
+        t_col_ids=params["t_col_ids"])
+    lead = x.shape[:-1]
+    in_dim = x.shape[-1]
+    xt = x.reshape(-1, in_dim).T                     # [K, T]
+    xt = constrain(xt, None, BATCH + (MODEL,))       # tokens over all axes
+    c = ops.spmm(arrays, meta, xt, backend=spec.backend, bn=spec.bn,
+                 interpret=spec.interpret)           # [M, T]
+    c = constrain(c, None, BATCH + (MODEL,))
+    return c.T.reshape(*lead, meta.shape[0])
+
+
+def sparse_param_flops(meta: ops.SparseMeta) -> int:
+    """FLOPs per token of this layer (2 * nnzb * h * w) — used by the
+    roofline's MODEL_FLOPS accounting for sparse archs."""
+    h, w = meta.block
+    return 2 * meta.nnzb * h * w

@@ -1,0 +1,260 @@
+"""Public jit-ready SpMM ops: backend dispatch + custom VJP.
+
+``SparseMatrix`` is the device-side, kernel-ready form of a host ``BCSR``:
+entries padded so every block-row is nonempty (nnz-stream kernel invariant),
+plus the precomputed transpose structure used by the backward pass
+(dX = A^T dY).  It is a registered pytree whose integer index arrays ride
+along as leaves (sharded/replicated like any other param) while the shape
+metadata is static.
+
+Backends:
+  * ``pallas`` — the TPU kernels (``interpret=True`` on CPU).
+  * ``xla``    — pure-jnp reference path (shardable; used by the 512-device
+                 dry-run and as the CI oracle).
+  * ``dense``  — materialize the padded dense matrix and ``jnp.dot`` (the
+                 cuBLAS comparison arm of the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bcsr as bcsr_lib
+from repro.kernels import bcsr_spmm as pk
+from repro.kernels import ref
+
+
+# ---------------------------------------------------------------------- types
+class SparseArrays(NamedTuple):
+    """Device arrays of a BCSR operand (pytree leaves)."""
+    vals: jnp.ndarray        # [nnzb, h, w] — the only trainable leaf
+    row_ids: jnp.ndarray     # [nnzb] int32, sorted row-major
+    col_ids: jnp.ndarray     # [nnzb] int32
+    real_mask: jnp.ndarray   # [nnzb] bool — False for padding entries
+    t_perm: jnp.ndarray      # [nnzb_t] int32 into vals (nnzb == sentinel zero)
+    t_row_ids: jnp.ndarray   # [nnzb_t] int32 (block-rows of A^T)
+    t_col_ids: jnp.ndarray   # [nnzb_t] int32
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseMeta:
+    """Static (hashable) metadata of a sparse operand."""
+    shape: Tuple[int, int]          # logical (M, K)
+    block: Tuple[int, int]          # (h, w)
+    n_block_rows: int
+    n_block_cols: int
+    nnzb: int
+    nnzb_t: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmmConfig:
+    backend: str = "pallas"         # pallas | xla | dense
+    bn: int = 512                   # N-tile width for the Pallas grid
+    interpret: bool = False
+    out_dtype: Optional[str] = None
+
+
+# ------------------------------------------------------------------- prepare
+def prepare_sparse(a: bcsr_lib.BCSR, dtype=jnp.bfloat16
+                   ) -> Tuple[SparseArrays, SparseMeta]:
+    """Host BCSR -> kernel-ready device arrays + static meta."""
+    nnzb_real = a.nnzb
+    a_p = a.ensure_nonempty_rows()
+    real_mask = np.zeros(a_p.nnzb, dtype=bool)
+    # padding entries are the all-zero blocks appended by ensure_nonempty_rows;
+    # identify originals by matching (row, col, nonzero) — padding is zero.
+    nz = np.abs(a_p.vals).sum(axis=(1, 2)) != 0
+    real_mask[nz] = True
+    # keep genuinely-zero original blocks trainable too (rare, from from_dense
+    # they don't exist; from random_bcsr fill they do): mark first nnzb_real
+    # sorted entries — conservative: everything not introduced by padding.
+    if a_p.nnzb == nnzb_real:
+        real_mask[:] = True
+
+    # ---- transpose structure (entries of A^T in row-major order of A^T) ----
+    order = np.lexsort((a_p.row_ids, a_p.col_ids))
+    t_perm = order.astype(np.int32)
+    t_row_ids = a_p.col_ids[order].astype(np.int32)
+    t_col_ids = a_p.row_ids[order].astype(np.int32)
+    # pad A^T's empty block-rows with the sentinel zero block (index nnzb)
+    n_brows_t = a_p.n_block_cols
+    present = np.zeros(n_brows_t, dtype=bool)
+    present[t_row_ids] = True
+    empty = np.flatnonzero(~present).astype(np.int32)
+    if empty.size:
+        t_perm = np.concatenate([t_perm,
+                                 np.full(empty.size, a_p.nnzb, np.int32)])
+        t_row_ids = np.concatenate([t_row_ids, empty])
+        t_col_ids = np.concatenate([t_col_ids,
+                                    np.zeros(empty.size, np.int32)])
+        order_t = np.lexsort((t_col_ids, t_row_ids))
+        t_perm, t_row_ids, t_col_ids = (t_perm[order_t], t_row_ids[order_t],
+                                        t_col_ids[order_t])
+
+    arrays = SparseArrays(
+        vals=jnp.asarray(a_p.vals, dtype=dtype),
+        row_ids=jnp.asarray(a_p.row_ids, dtype=jnp.int32),
+        col_ids=jnp.asarray(a_p.col_ids, dtype=jnp.int32),
+        real_mask=jnp.asarray(real_mask),
+        t_perm=jnp.asarray(t_perm, dtype=jnp.int32),
+        t_row_ids=jnp.asarray(t_row_ids, dtype=jnp.int32),
+        t_col_ids=jnp.asarray(t_col_ids, dtype=jnp.int32),
+    )
+    meta = SparseMeta(shape=a_p.shape, block=a_p.block,
+                      n_block_rows=a_p.n_block_rows,
+                      n_block_cols=a_p.n_block_cols,
+                      nnzb=a_p.nnzb, nnzb_t=int(t_row_ids.shape[0]))
+    return arrays, meta
+
+
+# ------------------------------------------------------------ forward pieces
+def _pad_b(b: jnp.ndarray, w: int, bn: int):
+    K, N = b.shape
+    k_pad = (-K) % w
+    n_pad = (-N) % bn
+    if k_pad or n_pad:
+        b = jnp.pad(b, ((0, k_pad), (0, n_pad)))
+    return b, N
+
+
+def _fwd_impl(cfg: SpmmConfig, meta: SparseMeta, arrays: SparseArrays,
+              b: jnp.ndarray) -> jnp.ndarray:
+    h, w = meta.block
+    M, K = meta.shape
+    out_dtype = jnp.dtype(cfg.out_dtype) if cfg.out_dtype else b.dtype
+    bn = min(cfg.bn, max(128, 1))
+    b_p, N = _pad_b(b, w, bn)
+    bn = min(bn, b_p.shape[1])
+    if cfg.backend == "pallas":
+        out = pk.bcsr_spmm_nnz_stream(
+            arrays.vals, arrays.row_ids, arrays.col_ids, b_p,
+            meta.n_block_rows, bn=bn, out_dtype=out_dtype,
+            interpret=cfg.interpret)
+    elif cfg.backend == "xla":
+        out = ref.bcsr_spmm_ref(arrays.vals, arrays.row_ids, arrays.col_ids,
+                                b_p, meta.n_block_rows, out_dtype=out_dtype)
+    elif cfg.backend == "dense":
+        dense = materialize_dense(arrays, meta)
+        out = ref.spmm_dense_ref(dense, b_p[: dense.shape[1]],
+                                 out_dtype=out_dtype)
+    else:
+        raise ValueError(f"unknown backend {cfg.backend!r}")
+    return out[:M, :N]
+
+
+def _dx_impl(cfg: SpmmConfig, meta: SparseMeta, arrays: SparseArrays,
+             g: jnp.ndarray) -> jnp.ndarray:
+    """dB = A^T @ dC via the transpose structure."""
+    h, w = meta.block
+    M, K = meta.shape
+    sentinel = jnp.zeros((1,) + tuple(arrays.vals.shape[1:]),
+                         dtype=arrays.vals.dtype)
+    vals_ext = jnp.concatenate([arrays.vals, sentinel], axis=0)
+    t_vals = jnp.transpose(vals_ext[arrays.t_perm], (0, 2, 1))  # [nnzb_t,w,h]
+    bn = min(cfg.bn, max(128, 1))
+    g_p, N = _pad_b(g, h, bn)
+    bn = min(bn, g_p.shape[1])
+    if cfg.backend == "pallas":
+        out = pk.bcsr_spmm_nnz_stream(
+            t_vals, arrays.t_row_ids, arrays.t_col_ids, g_p,
+            meta.n_block_cols, bn=bn, out_dtype=g.dtype,
+            interpret=cfg.interpret)
+    else:
+        out = ref.bcsr_spmm_ref(t_vals, arrays.t_row_ids, arrays.t_col_ids,
+                                g_p, meta.n_block_cols, out_dtype=g.dtype)
+    return out[:K, :N]
+
+
+def _dvals_impl(cfg: SpmmConfig, meta: SparseMeta, arrays: SparseArrays,
+                g: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    h, w = meta.block
+    bn = min(cfg.bn, max(128, 1))
+    g_p, _ = _pad_b(g, h, bn)
+    b_p, _ = _pad_b(b, w, bn)
+    n_pad = max(g_p.shape[1], b_p.shape[1])
+    g_p = jnp.pad(g_p, ((0, (-g_p.shape[0]) % h), (0, n_pad - g_p.shape[1])))
+    b_p = jnp.pad(b_p, ((0, 0), (0, n_pad - b_p.shape[1])))
+    if cfg.backend == "pallas":
+        dvals = pk.bcsr_sddmm(g_p, b_p, arrays.row_ids, arrays.col_ids,
+                              h, w, bn=min(bn, n_pad),
+                              out_dtype=arrays.vals.dtype,
+                              interpret=cfg.interpret)
+    else:
+        dvals = ref.bcsr_sddmm_ref(g_p, b_p, arrays.row_ids, arrays.col_ids,
+                                   h, w, out_dtype=arrays.vals.dtype)
+    # padding entries are structural zeros — their gradient is masked
+    return dvals * arrays.real_mask[:, None, None].astype(dvals.dtype)
+
+
+def materialize_dense(arrays: SparseArrays, meta: SparseMeta) -> jnp.ndarray:
+    """Scatter the blocks into the padded dense matrix (cuBLAS arm)."""
+    h, w = meta.block
+    nbr, nbc = meta.n_block_rows, meta.n_block_cols
+    flat = jnp.zeros((nbr * nbc, h, w), dtype=arrays.vals.dtype)
+    flat = flat.at[arrays.row_ids * nbc + arrays.col_ids].add(arrays.vals)
+    dense = flat.reshape(nbr, nbc, h, w).transpose(0, 2, 1, 3)
+    return dense.reshape(nbr * h, nbc * w)
+
+
+# ----------------------------------------------------------------- custom vjp
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _spmm(cfg: SpmmConfig, meta: SparseMeta, vals: jnp.ndarray,
+          b: jnp.ndarray, rest: tuple) -> jnp.ndarray:
+    arrays = SparseArrays(vals, *rest)
+    return _fwd_impl(cfg, meta, arrays, b)
+
+
+def _spmm_fwd(cfg, meta, vals, b, rest):
+    arrays = SparseArrays(vals, *rest)
+    return _fwd_impl(cfg, meta, arrays, b), (vals, b, rest)
+
+
+def _spmm_bwd(cfg, meta, res, g):
+    vals, b, rest = res
+    arrays = SparseArrays(vals, *rest)
+    g2 = g.astype(b.dtype)
+    db = _dx_impl(cfg, meta, arrays, g2)[: b.shape[0], : b.shape[1]]
+    dvals = _dvals_impl(cfg, meta, arrays, g2, b)
+    zeros_rest = jax.tree.map(
+        lambda x: np.zeros(x.shape, jax.dtypes.float0), rest)
+    return dvals, db.astype(b.dtype), zeros_rest
+
+
+_spmm.defvjp(_spmm_fwd, _spmm_bwd)
+
+
+# ------------------------------------------------------------------ public API
+def spmm(arrays: SparseArrays, meta: SparseMeta, b: jnp.ndarray,
+         *, backend: str = "pallas", bn: int = 512,
+         interpret: bool = False, out_dtype=None) -> jnp.ndarray:
+    """C = A @ B, differentiable w.r.t. ``arrays.vals`` and ``b``.
+
+    A is the BCSR operand from ``prepare_sparse``; B is ``[K, N]`` dense.
+    """
+    cfg = SpmmConfig(backend=backend, bn=bn, interpret=interpret,
+                     out_dtype=str(out_dtype) if out_dtype else None)
+    rest = tuple(arrays[1:])
+    return _spmm(cfg, meta, arrays.vals, b, rest)
+
+
+def make_row_loop_schedule(a: bcsr_lib.BCSR):
+    """Host-side padded (flat_idx, flat_col, row_len, max_bpr) for the
+    paper-faithful static kernel."""
+    bpr = a.blocks_per_row()
+    nbr = a.n_block_rows
+    max_bpr = max(int(bpr.max()) if bpr.size else 1, 1)
+    flat_idx = np.zeros(nbr * max_bpr, dtype=np.int32)
+    flat_col = np.zeros(nbr * max_bpr, dtype=np.int32)
+    for i in range(nbr):
+        s0, s1 = int(a.rowptr[i]), int(a.rowptr[i + 1])
+        flat_idx[i * max_bpr: i * max_bpr + (s1 - s0)] = np.arange(
+            s0, s1, dtype=np.int32)
+        flat_col[i * max_bpr: i * max_bpr + (s1 - s0)] = a.col_ids[s0:s1]
+    return (jnp.asarray(flat_idx), jnp.asarray(flat_col),
+            jnp.asarray(bpr.astype(np.int32)), max_bpr)

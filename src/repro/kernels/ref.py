@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for the BCSR SpMM kernels.
+
+These are the reference semantics every Pallas kernel is tested against
+(``tests/test_kernels.py`` sweeps shapes/dtypes with assert_allclose), and
+they double as the ``xla`` backend used by the 512-device dry-run (gather +
+einsum + segment_sum lower to shardable XLA HLO on any backend).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bcsr_spmm_ref(vals: jnp.ndarray, row_ids: jnp.ndarray,
+                  col_ids: jnp.ndarray, b: jnp.ndarray,
+                  n_block_rows: int, out_dtype=None) -> jnp.ndarray:
+    """C = A @ B with A in BCSR block form.
+
+    vals     [nnzb, h, w]
+    row_ids  [nnzb] block-row of each block
+    col_ids  [nnzb] block-col of each block
+    b        [K, N] dense (K must be a multiple of w)
+    returns  [n_block_rows * h, N]
+    """
+    nnzb, h, w = vals.shape
+    K, N = b.shape
+    assert K % w == 0, (K, w)
+    b_blocks = b.reshape(K // w, w, N)
+    gathered = b_blocks[col_ids]  # [nnzb, w, N]
+    prod = jnp.einsum(
+        "shw,swn->shn",
+        vals.astype(jnp.float32),
+        gathered.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    out = jax.ops.segment_sum(prod, row_ids, num_segments=n_block_rows)
+    out = out.reshape(n_block_rows * h, N)
+    return out.astype(out_dtype or b.dtype)
+
+
+def bcsr_sddmm_ref(dc: jnp.ndarray, b: jnp.ndarray, row_ids: jnp.ndarray,
+                   col_ids: jnp.ndarray, h: int, w: int,
+                   out_dtype=None) -> jnp.ndarray:
+    """dVals = (dC @ B^T) sampled at the nonzero blocks (the weight gradient
+    of the sparse operand).
+
+    dc       [M, N]   upstream cotangent (M multiple of h)
+    b        [K, N]   the dense forward operand (K multiple of w)
+    returns  [nnzb, h, w]
+    """
+    M, N = dc.shape
+    K, _ = b.shape
+    dc_blocks = dc.reshape(M // h, h, N)[row_ids]   # [nnzb, h, N]
+    b_blocks = b.reshape(K // w, w, N)[col_ids]     # [nnzb, w, N]
+    dvals = jnp.einsum(
+        "shn,swn->shw",
+        dc_blocks.astype(jnp.float32),
+        b_blocks.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return dvals.astype(out_dtype or dc.dtype)
+
+
+def spmm_dense_ref(a_dense: jnp.ndarray, b: jnp.ndarray,
+                   out_dtype=None) -> jnp.ndarray:
+    """The cuBLAS stand-in: multiply the (explicitly padded) dense matrix."""
+    out = jnp.dot(a_dense.astype(jnp.float32), b.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or b.dtype)
+
+
+def spmm_csr_ref(data: jnp.ndarray, rows: jnp.ndarray, cols: jnp.ndarray,
+                 b: jnp.ndarray, m: int, out_dtype=None) -> jnp.ndarray:
+    """The cuSPARSE stand-in: scalar COO/CSR SpMM via gather + segment_sum
+    (one elementary op per nonzero — the paper's n_e upper-bound regime)."""
+    prod = data.astype(jnp.float32)[:, None] * b[cols].astype(jnp.float32)
+    out = jax.ops.segment_sum(prod, rows, num_segments=m)
+    return out.astype(out_dtype or b.dtype)

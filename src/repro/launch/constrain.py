@@ -1,0 +1,47 @@
+"""Mesh-aware activation sharding constraints.
+
+``constrain(x, axis0, axis1, ...)`` applies ``with_sharding_constraint``
+with the given logical axes when a mesh context is active (dry-run / real
+launch); it is a no-op in mesh-less unit tests.  Axes missing from the
+active mesh or not dividing the dimension are dropped.
+
+``BATCH`` is the conventional hierarchical batch axis (pod+data).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax._src import mesh as _mesh_src
+from jax.sharding import PartitionSpec as P
+
+BATCH = ("pod", "data")
+MODEL = "model"
+
+
+def _active_mesh():
+    env = _mesh_src.thread_resources.env
+    m = env.physical_mesh
+    return None if m.empty else m
+
+
+def constrain(x, *axes):
+    mesh = _active_mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+
+    def fit(a, dim):
+        if a is None:
+            return None
+        if isinstance(a, tuple):
+            kept = tuple(x_ for x_ in a if x_ in names)
+            while kept and dim % int(np.prod([mesh.shape[k] for k in kept])):
+                kept = kept[:-1]
+            return kept or None
+        if a not in names or dim % int(mesh.shape[a]):
+            return None
+        return a
+
+    spec = [fit(a, d) for a, d in zip(axes, x.shape)]
+    spec += [None] * (x.ndim - len(spec))
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,154 @@
+"""Roofline-term extraction from a compiled (dry-run) executable.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+  compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+  memory     = HLO_bytes_per_device / HBM_BW
+  collective = sum over collective ops of bytes_wire / ICI_BW
+               (all-reduce counted at the ring 2(n-1)/n factor, all-gather /
+               reduce-scatter at (n-1)/n, all-to-all at (n-1)/n of the
+               per-device payload; `n` = devices on the reduced axes)
+
+``cost_analysis()`` yields flops+bytes of the per-device SPMD module;
+collective bytes are NOT included there, so we parse the optimized HLO text.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.perf_model import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+
+# "bf16[4096,512]{1,0}" or "f32[]" or tuple "(f32[8,16], f32[8,16])"
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^)=]*\)?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(", re.M)
+_REPLICA_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_REPLICA_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        numel = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    numel *= int(d)
+        total += numel * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _REPLICA_GROUPS_V2_RE.search(line)
+    if m:                                   # [num_groups, group_size]
+        return int(m.group(2))
+    m = _REPLICA_GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{} ")
+        if first:
+            return len([x for x in first.split(",") if x.strip() != ""])
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_total: Dict[str, int]      # output-shape bytes per kind
+    wire_bytes: float                # per-device bytes actually crossing links
+
+    def to_dict(self):
+        return {"counts": self.counts, "bytes": self.bytes_total,
+                "wire_bytes": self.wire_bytes}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    btot: Dict[str, int] = {}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        type_str, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue                        # counted at -start
+        nbytes = _shape_bytes(type_str)
+        n = max(_group_size(line), 1)
+        counts[kind] = counts.get(kind, 0) + 1
+        btot[kind] = btot.get(kind, 0) + nbytes
+        if kind == "collective-permute":     # point-to-point: full payload
+            wire += nbytes
+            continue
+        if n <= 1:
+            continue
+        if kind == "all-reduce":
+            wire += 2.0 * (n - 1) / n * nbytes
+        elif kind in ("all-gather", "reduce-scatter", "all-to-all"):
+            wire += (n - 1) / n * nbytes
+    return CollectiveStats(counts, btot, wire)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float               # 6*N*D useful flops (global)
+    useful_ratio: float              # model_flops / (flops_per_device*chips)
+    peak_fraction: float             # compute term / max(all terms)
+    collectives: Dict
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def compute_roofline(flops: float, bytes_acc: float, wire_bytes: float,
+                     n_devices: int, model_flops: float,
+                     peak=PEAK_FLOPS_BF16, hbm=HBM_BW, ici=ICI_BW,
+                     collectives: Optional[Dict] = None) -> Roofline:
+    t_c = flops / peak
+    t_m = bytes_acc / hbm
+    t_x = wire_bytes / ici
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    total_hw_flops = flops * n_devices
+    useful = model_flops / total_hw_flops if total_hw_flops else 0.0
+    t_max = max(t_c, t_m, t_x) or 1.0
+    return Roofline(
+        flops_per_device=flops, bytes_per_device=bytes_acc,
+        wire_bytes_per_device=wire_bytes,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bottleneck=bottleneck, model_flops=model_flops,
+        useful_ratio=useful, peak_fraction=t_c / t_max,
+        collectives=collectives or {})
+
+
+def model_flops_for(cfg, shape, n_tokens: Optional[int] = None) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) for train; 2*N*D per generated
+    token for decode/prefill forward-only."""
+    n_active = cfg.active_param_count()
+    if n_tokens is None:
+        n_tokens = shape.global_batch * shape.seq_len if \
+            shape.kind in ("train", "prefill") else shape.global_batch
+    factor = 6.0 if shape.kind == "train" else 2.0
+    return factor * n_active * n_tokens

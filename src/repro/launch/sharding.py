@@ -1,0 +1,249 @@
+"""Sharding rules: parameter/optimizer/batch/cache PartitionSpecs.
+
+Strategy (MaxText-style 2D: TP x FSDP):
+  * `model` axis: tensor parallelism — attention heads, FFN hidden, MoE
+    experts (EP), vocab, MLA per-head up-projections, BCSR nnz blocks.
+  * `data` (+ `pod`) axes: batch parallelism; additionally FSDP-shards every
+    weight's non-TP major dim (ZeRO-3-lite — GSPMD inserts the all-gathers).
+  * decode caches: batch over data axes, kv-heads over model; when kv-heads
+    don't divide the model axis (GQA kv=8 on a 16-wide axis) the cache
+    SEQUENCE is sharded over `model` instead; the 500k single-request cell
+    shards the sequence over the data axes too (sequence-parallel decode).
+
+All rules are validated against tensor shapes: any mesh axis that does not
+divide its dimension is dropped (jit in_shardings require divisibility).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.launch.mesh import data_axes
+
+
+# -------------------------------------------------------------- param rules
+# spec given for the TRAILING dims; leading stack dims padded with None.
+_PARAM_RULES = {
+    # embeddings / head
+    "embed": P("model", "data"),          # [V, D]
+    "lm_head": P("data", "model"),        # [D, V]
+    # attention
+    "wq": P("data", "model"), "wk": P("data", "model"),
+    "wv": P("data", "model"), "wo": P("model", "data"),
+    "bq": P("model"), "bk": P("model"), "bv": P("model"),
+    # MLA
+    "wq_a": P("data", None), "wq_b": P(None, "model"),
+    "wkv_a": P("data", None), "wkv_b": P(None, "model"),
+    # dense / shared-expert MLP
+    "w_gate": P("data", "model"), "w_up": P("data", "model"),
+    "w_down": P("model", "data"),
+    # MoE (experts on model = EP); router replicated on model
+    "router": P("data", None),
+    # SSD: FSDP on d_model; inner dims replicated (see DESIGN §5)
+    "w_in": P("data", None), "w_out": P(None, "data"),
+    "conv_w": P(None, None), "conv_b": P(None),
+    "A_log": P(None), "D": P(None), "dt_bias": P(None),
+    # norms
+    "norm": P(None), "ln1": P(None), "ln2": P(None),
+    "ln1_post": P(None), "ln2_post": P(None), "final_norm": P(None),
+    "q_norm": P(None), "kv_norm": P(None),
+    # BCSR sparse layer: REPLICATED.  nnz-sharding over `model` makes every
+    # sparse matmul reduce partial output rows across shards (all-reduce of
+    # [M, tokens] activations, ~1 GB/layer measured — §Perf C baseline);
+    # the block-sparse weights themselves are tiny (90% of the dense FFN
+    # removed), so replication costs MBs and kills the collective entirely.
+    "vals": P(None, None, None),
+    "row_ids": P(None), "col_ids": P(None), "real_mask": P(None),
+    "t_perm": P(None), "t_row_ids": P(None), "t_col_ids": P(None),
+}
+
+_MOE_EXPERT_LEAVES = {"w_gate", "w_up", "w_down"}  # [E, D, F] under "moe"
+
+
+def _axis_size(mesh, a) -> int:
+    if a is None:
+        return 1
+    if isinstance(a, tuple):
+        return int(np.prod([mesh.shape[x] for x in a]))
+    return int(mesh.shape[a])
+
+
+def _sanitize(mesh, a):
+    """Drop axes not present in this mesh (small test meshes)."""
+    if a is None:
+        return None
+    if isinstance(a, tuple):
+        kept = tuple(x for x in a if x in mesh.axis_names)
+        return kept if kept else None
+    return a if a in mesh.axis_names else None
+
+
+def fit_spec(mesh, spec: P, shape) -> P:
+    """Sanitize + enforce divisibility (jit in_shardings requirement)."""
+    out = []
+    for dim, a in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        a = _sanitize(mesh, a)
+        if a is not None and dim % _axis_size(mesh, a) != 0:
+            if isinstance(a, tuple):          # try a shrinking prefix
+                while a and dim % _axis_size(mesh, a) != 0:
+                    a = a[:-1]
+                a = a or None
+            else:
+                a = None
+        out.append(a)
+    return P(*out)
+
+
+def _rule_for(path, leaf) -> P:
+    keys = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+    name = keys[-1]
+    ndim = leaf.ndim
+
+    if name in _MOE_EXPERT_LEAVES and "moe" in keys and "shared" not in keys:
+        base = {"w_gate": P("model", "data", None),
+                "w_up": P("model", "data", None),
+                "w_down": P("model", None, "data")}[name]
+    elif name == "embed" and ndim >= 3:
+        base = P(None, "model", "data")       # codebooks [ncb, V, D]
+    elif name == "lm_head" and ndim >= 3:
+        base = P(None, "data", "model")
+    elif name in _PARAM_RULES:
+        base = _PARAM_RULES[name]
+    else:
+        base = P()
+
+    pad = ndim - len(base)
+    if pad < 0:
+        return P()
+    return P(*([None] * pad + list(base)))
+
+
+def _batch_axes(mesh):
+    da = data_axes(mesh)
+    return da if len(da) > 1 else (da[0] if da else None)
+
+
+def _strip_data_axes(spec: P) -> P:
+    """Serve-mode: weights are NOT FSDP-sharded (no per-token all-gathers);
+    TP over `model` only, replicas across data axes — standard inference
+    sharding."""
+    def strip(a):
+        if a is None:
+            return None
+        if isinstance(a, tuple):
+            kept = tuple(x for x in a if x not in ("data", "pod"))
+            return kept or None
+        return None if a in ("data", "pod") else a
+    return P(*[strip(a) for a in spec])
+
+
+# serve-mode overrides: decode is WEIGHT-traffic bound, so layers whose
+# train rule is FSDP-only get explicit inference TP (§Perf cell A2/A3).
+# SSD w_in is ROW-parallel (its fused z|xBC|dt output dim is misaligned with
+# shard boundaries — column-parallel forced per-layer state resharding,
+# measured 2.4x worse in §Perf A2); the psum'd projection is only ~2 MB.
+_SERVE_RULES = {
+    "w_in": P("model", None),
+    "w_out": P(None, "model"),
+    "wq_a": P(None, "model"), "wkv_a": P(None, None),
+    "router": P(None, None),
+}
+
+
+def param_shardings(mesh, params_or_specs, mode: str = "train") -> Any:
+    def assign(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        rule = _rule_for(path, leaf)
+        if mode == "serve":
+            name = keys[-1]
+            is_expert = name in _MOE_EXPERT_LEAVES and "moe" in keys and \
+                "shared" not in keys
+            if is_expert:
+                pass      # MoE expert banks stay FSDP-sharded: replicating
+                          # 60x7.5 GB of experts cannot fit HBM (§Perf A/B)
+            elif name in _SERVE_RULES:
+                base = _SERVE_RULES[name]
+                rule = P(*([None] * (leaf.ndim - len(base)) + list(base)))
+            else:
+                rule = _strip_data_axes(rule)
+        spec = fit_spec(mesh, rule, leaf.shape)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(assign, params_or_specs)
+
+
+def opt_state_shardings(mesh, opt_specs, params_shardings=None) -> Any:
+    """m/v mirror the param shardings; scalar leaves replicated."""
+    def assign(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        # strip the leading "m"/"v" container key and reuse the param rule
+        spec = fit_spec(mesh, _rule_for(path[1:], leaf), leaf.shape)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(assign, opt_specs)
+
+
+# ------------------------------------------------------------ batch / cache
+def batch_shardings(mesh, batch_specs) -> Any:
+    bd = _batch_axes(mesh)
+
+    def assign(path, leaf):
+        spec = fit_spec(mesh, P(*([bd] + [None] * (leaf.ndim - 1))),
+                        leaf.shape)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(assign, batch_specs)
+
+
+def cache_shardings(mesh, cache_specs_tree, cfg: ModelConfig,
+                    seq_shard: bool = False) -> Any:
+    """Decode caches.  Layout conventions (after layer stacking):
+       attn k/v:   [..., B, S, KV, dh]
+       mla:        ckv [..., B, S, r] / krope [..., B, S, rope]
+       ssd:        conv [..., B, cw-1, d_xbc]; state [..., B, H, P, N]
+    seq_shard=True (single-request long-context): S takes the data axes."""
+    bd = _batch_axes(mesh)
+    model_ok = "model" in mesh.axis_names
+
+    def assign(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        name = keys[-1]
+        nd = leaf.ndim
+        shape = leaf.shape
+        if name in ("k", "v"):
+            B, S, KV, dh = shape[-4:]
+            kv_axis = "model" if model_ok and KV % mesh.shape["model"] == 0 \
+                else None
+            s_axes = []
+            if seq_shard and bd is not None:
+                s_axes += list(bd) if isinstance(bd, tuple) else [bd]
+            if kv_axis is None and model_ok:
+                s_axes.append("model")
+            spec = [None] * (nd - 4) + [
+                None if seq_shard else bd,
+                tuple(s_axes) if s_axes else None,
+                kv_axis, None]
+        elif name in ("ckv", "krope"):
+            s_axes = []
+            if seq_shard and bd is not None:
+                s_axes += list(bd) if isinstance(bd, tuple) else [bd]
+            spec = [None] * (nd - 3) + [
+                None if seq_shard else bd,
+                tuple(s_axes) if s_axes else None, None]
+        elif name == "conv":
+            spec = [None] * (nd - 3) + [None if seq_shard else bd,
+                                        None, None]
+        elif name == "state":
+            spec = [None] * (nd - 4) + [None if seq_shard else bd,
+                                        None, None, None]
+        else:
+            spec = [None] * nd
+        return NamedSharding(mesh, fit_spec(mesh, P(*spec), shape))
+    return jax.tree_util.tree_map_with_path(assign, cache_specs_tree)
+
+
+def replicated(mesh, specs) -> Any:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), specs)

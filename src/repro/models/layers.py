@@ -1,0 +1,349 @@
+"""Transformer layer components: norms, RoPE, GQA attention (sliding window,
+logit softcap, QKV bias), MLA (DeepSeek), gated MLP (dense or block-sparse —
+the paper's technique as a drop-in FFN).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init fns take (cfg, key).
+  * activations are [B, L, D]; caches are dicts of ring buffers written at
+    ``pos % cache_len`` (works for both full and sliding-window caches).
+  * attention math accumulates in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
+
+from repro.core.sparse_linear import (SparsitySpec, apply_sparse_linear,
+                                      init_sparse_linear,
+                                      sparse_linear_specs)
+from repro.models import unroll as U
+
+# chunk size for q-blocked (flash-style, O(L*chunk) memory) attention
+Q_CHUNK = 1024
+NEG_INF = -2.0e38
+
+
+# ------------------------------------------------------------------ basics
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def _rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x [..., L, H, dh]; positions [..., L] int32 (broadcastable)."""
+    dh = x.shape[-1]
+    freqs = _rope_freqs(dh, theta)                       # [dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs   # [..., L, dh/2]
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _dense(x, w, b=None):
+    y = jnp.einsum("...d,df->...f", x, w)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def _init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ================================================================= attention
+def init_attention(cfg, key, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": _init(ks[0], (d, h * hd), s, dtype),
+        "wk": _init(ks[1], (d, kv * hd), s, dtype),
+        "wv": _init(ks[2], (d, kv * hd), s, dtype),
+        "wo": _init(ks[3], (h * hd, d), (h * hd) ** -0.5, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    return p
+
+
+def _mask_bias(q_pos, k_pos, window):
+    """[..., Lq, Sk] additive mask: causal + optional sliding window +
+    validity (k_pos >= 0)."""
+    ok = (k_pos[..., None, :] <= q_pos[..., :, None]) & \
+         (k_pos[..., None, :] >= 0)
+    if window is not None:
+        ok &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _sdpa(q, k, v, bias, cap, scale):
+    """q [B,Lq,H,dh] k [B,S,KV,dh] v [B,S,KV,dv] bias [B,Lq,S]
+    -> [B,Lq,H,dv] (dv may differ from dh, e.g. MLA)."""
+    B, Lq, H, dh = q.shape
+    KV = k.shape[2]
+    dv = v.shape[-1]
+    rep = H // KV
+    qg = q.reshape(B, Lq, KV, rep, dh)
+    scores = jnp.einsum("blgrd,bsgd->bgrls", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = softcap(scores, cap)
+    scores = scores + bias[:, None, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bgrls,bsgd->blgrd", probs, v.astype(jnp.float32))
+    return ctx.reshape(B, Lq, H, dv)
+
+
+def attention(cfg, p, x, *, window=None, cache=None, pos=None,
+              rope_theta=None):
+    """Returns (y, new_cache).  Modes:
+      train:    cache None, pos None — full causal self-attention.
+      prefill:  cache dict (zeroed, len >= L), pos = 0 — causal + cache write.
+      decode:   cache dict, L == 1, pos = current position (int32 scalar).
+    """
+    B, L, D = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    theta = rope_theta or cfg.rope_theta
+    q = _dense(x, p["wq"], p.get("bq")).reshape(B, L, h, dh)
+    k = _dense(x, p["wk"], p.get("bk")).reshape(B, L, kv, dh)
+    v = _dense(x, p["wv"], p.get("bv")).reshape(B, L, kv, dh)
+
+    if cache is None or pos is None:        # training: positions 0..L-1
+        positions = jnp.arange(L, dtype=jnp.int32)[None, :]
+    else:
+        positions = (pos + jnp.arange(L, dtype=jnp.int32))[None, :]
+    q = apply_rope(q, jnp.broadcast_to(positions, (B, L)), theta)
+    k = apply_rope(k, jnp.broadcast_to(positions, (B, L)), theta)
+
+    scale = dh ** -0.5
+    cap = cfg.attn_logit_softcap
+
+    if cache is None:
+        ctx = _causal_attention(q, k, v, window, cap, scale)
+        new_cache = None
+    elif L > 1:                              # prefill into empty cache
+        Sc = cache["k"].shape[1]
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], k[:, -Sc:].astype(cache["k"].dtype), (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], v[:, -Sc:].astype(cache["v"].dtype), (0, 0, 0, 0))
+        new_cache = {"k": kc, "v": vc}
+        ctx = _causal_attention(q, k, v, window, cap, scale)
+    else:                                    # decode one token
+        Sc = cache["k"].shape[1]
+        slot = pos % Sc
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        new_cache = {"k": kc, "v": vc}
+        j = jnp.arange(Sc, dtype=jnp.int32)
+        k_pos = pos - ((pos - j) % Sc)       # ring-buffer slot positions
+        bias = _mask_bias(jnp.reshape(pos, (1,)), k_pos, window)  # [1, Sc]
+        bias = jnp.broadcast_to(bias[None], (B, 1, Sc))
+        ctx = _sdpa(q, kc, vc, bias, cap, scale)
+
+    y = _dense(ctx.reshape(B, L, h * dh).astype(x.dtype), p["wo"])
+    return y, new_cache
+
+
+def _causal_attention(q, k, v, window, cap, scale):
+    """Full causal attention, q-chunked above Q_CHUNK (O(L*chunk) scores
+    memory — the flash-attention analogue for the 32k prefill cells)."""
+    B, L, H, dh = q.shape
+    pos = jnp.arange(L, dtype=jnp.int32)
+    if L <= Q_CHUNK:
+        bias = _mask_bias(pos, pos, window)[None]
+        return _sdpa(q, k, v, jnp.broadcast_to(bias, (B, L, L)), cap, scale)
+
+    n_chunks = L // Q_CHUNK
+    assert L % Q_CHUNK == 0, (L, Q_CHUNK)
+
+    def chunk_fn(carry, qi):
+        q_chunk, q_pos = qi                     # [B, C, H, dh], [C]
+        bias = _mask_bias(q_pos, pos, window)[None]
+        ctx = _sdpa(q_chunk, k, v, jnp.broadcast_to(bias, (B, Q_CHUNK, L)),
+                    cap, scale)
+        return carry, ctx
+
+    q_chunks = q.reshape(B, n_chunks, Q_CHUNK, H, dh).transpose(1, 0, 2, 3, 4)
+    pos_chunks = pos.reshape(n_chunks, Q_CHUNK)
+    _, ctxs = U.scan(chunk_fn, None, (q_chunks, pos_chunks))
+    dv = ctxs.shape[-1]                      # may differ from dh (MLA)
+    return ctxs.transpose(1, 0, 2, 3, 4).reshape(B, L, H, dv)
+
+
+def init_attn_cache(cfg, batch, cache_len, dtype, window=None):
+    Sc = min(cache_len, window) if window else cache_len
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((batch, Sc, kv, dh), dtype),
+            "v": jnp.zeros((batch, Sc, kv, dh), dtype)}
+
+
+# ======================================================================= MLA
+def init_mla(cfg, key, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    nope, rope, vd, r = (cfg.nope_head_dim, cfg.rope_head_dim,
+                         cfg.v_head_dim, cfg.kv_lora_rank)
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    p = {}
+    q_dim = h * (nope + rope)
+    if cfg.q_lora_rank:
+        p["wq_a"] = _init(ks[0], (d, cfg.q_lora_rank), s, dtype)
+        p["q_norm"] = jnp.zeros((cfg.q_lora_rank,), jnp.float32)
+        p["wq_b"] = _init(ks[1], (cfg.q_lora_rank, q_dim),
+                          cfg.q_lora_rank ** -0.5, dtype)
+    else:
+        p["wq"] = _init(ks[0], (d, q_dim), s, dtype)
+    p["wkv_a"] = _init(ks[2], (d, r + rope), s, dtype)
+    p["kv_norm"] = jnp.zeros((r,), jnp.float32)
+    p["wkv_b"] = _init(ks[3], (r, h * (nope + vd)), r ** -0.5, dtype)
+    p["wo"] = _init(ks[4], (h * vd, d), (h * vd) ** -0.5, dtype)
+    return p
+
+
+def mla_attention(cfg, p, x, *, cache=None, pos=None):
+    """Multi-head Latent Attention.  Cache holds the compressed latent
+    (c_kv, k_rope) only — decode uses the absorbed-matrix form."""
+    B, L, D = x.shape
+    h = cfg.n_heads
+    nope, rope, vd, r = (cfg.nope_head_dim, cfg.rope_head_dim,
+                         cfg.v_head_dim, cfg.kv_lora_rank)
+    theta = cfg.rope_theta
+
+    if cfg.q_lora_rank:
+        q = _dense(rms_norm(_dense(x, p["wq_a"]), p["q_norm"]), p["wq_b"])
+    else:
+        q = _dense(x, p["wq"])
+    q = q.reshape(B, L, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+
+    kv_a = _dense(x, p["wkv_a"])                         # [B, L, r + rope]
+    c_kv = rms_norm(kv_a[..., :r], p["kv_norm"])
+    k_rope = kv_a[..., r:].reshape(B, L, 1, rope)
+
+    if cache is None or pos is None:
+        positions = jnp.arange(L, dtype=jnp.int32)[None, :]
+    else:
+        positions = (pos + jnp.arange(L, dtype=jnp.int32))[None, :]
+    positions = jnp.broadcast_to(positions, (B, L))
+    q_rope = apply_rope(q_rope, positions, theta)
+    k_rope = apply_rope(k_rope, positions, theta)
+
+    scale = (nope + rope) ** -0.5
+    w_kv_b = p["wkv_b"].reshape(r, h, nope + vd)
+    w_uk, w_uv = w_kv_b[..., :nope], w_kv_b[..., nope:]
+
+    if cache is not None and L == 1:
+        # ---- absorbed decode: score against the latent cache directly
+        Sc = cache["ckv"].shape[1]
+        slot = pos % Sc
+        ckv_c = jax.lax.dynamic_update_slice(
+            cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, slot, 0))
+        krope_c = jax.lax.dynamic_update_slice(
+            cache["krope"], k_rope[:, :, 0].astype(cache["krope"].dtype),
+            (0, slot, 0))
+        new_cache = {"ckv": ckv_c, "krope": krope_c}
+        q_lat = jnp.einsum("blhn,rhn->blhr", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))       # [B,1,h,r]
+        s_lat = jnp.einsum("blhr,bsr->bhls", q_lat,
+                           ckv_c.astype(jnp.float32))
+        s_rope = jnp.einsum("blhe,bse->bhls", q_rope.astype(jnp.float32),
+                            krope_c.astype(jnp.float32))
+        scores = (s_lat + s_rope) * scale
+        j = jnp.arange(Sc, dtype=jnp.int32)
+        k_pos = pos - ((pos - j) % Sc)
+        bias = _mask_bias(jnp.reshape(pos, (1,)), k_pos, None)   # [1, Sc]
+        probs = jax.nn.softmax(scores + bias[None, None], axis=-1)
+        ctx_lat = jnp.einsum("bhls,bsr->blhr", probs,
+                             ckv_c.astype(jnp.float32))
+        ctx = jnp.einsum("blhr,rhv->blhv", ctx_lat, w_uv.astype(jnp.float32))
+    else:
+        # ---- train/prefill: materialize per-head K, V — constrained to
+        # heads-over-model so sequence gathers move the 576-dim latent and
+        # 1/16 head slices, not the full 128-head expansion (§Perf B2)
+        from repro.launch.constrain import BATCH, MODEL, constrain
+        k_nope = jnp.einsum("blr,rhn->blhn", c_kv, w_uk.astype(c_kv.dtype))
+        v = jnp.einsum("blr,rhv->blhv", c_kv, w_uv.astype(c_kv.dtype))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (B, L, h, rope))], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        qq = constrain(qq, BATCH, None, MODEL)
+        k = constrain(k, BATCH, None, MODEL)
+        v = constrain(v, BATCH, None, MODEL)
+        ctx = _causal_attention(qq, k, v, None, None, scale)  # [B,L,h,vd]
+        ctx = _checkpoint_name(ctx, "attn_ctx")
+        if cache is not None:               # prefill: write latent cache
+            Sc = cache["ckv"].shape[1]
+            ckv_c = jax.lax.dynamic_update_slice(
+                cache["ckv"], c_kv[:, -Sc:].astype(cache["ckv"].dtype),
+                (0, 0, 0))
+            krope_c = jax.lax.dynamic_update_slice(
+                cache["krope"], k_rope[:, -Sc:, 0].astype(
+                    cache["krope"].dtype), (0, 0, 0))
+            new_cache = {"ckv": ckv_c, "krope": krope_c}
+        else:
+            new_cache = None
+
+    y = _dense(ctx.reshape(B, L, h * vd).astype(x.dtype), p["wo"])
+    return y, new_cache
+
+
+def init_mla_cache(cfg, batch, cache_len, dtype):
+    return {"ckv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, cache_len, cfg.rope_head_dim), dtype)}
+
+
+# ======================================================================= MLP
+def init_mlp(cfg, key, dtype, d_ff=None, seed_hint: int = 0):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.ffn_sparsity is not None:
+        # sparse patterns are STRUCTURAL (host-side numpy): seeded by a
+        # python int per layer, not the traced jax key — this keeps
+        # init_params eval_shape-able for the dry-run
+        seed = 7919 * (seed_hint + 1)
+        gate, _ = init_sparse_linear(seed, d, f, cfg.ffn_sparsity, dtype)
+        up, _ = init_sparse_linear(seed + 1, d, f, cfg.ffn_sparsity, dtype)
+        down, _ = init_sparse_linear(seed + 2, f, d, cfg.ffn_sparsity, dtype)
+        return {"gate": gate, "up": up, "down": down}
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _init(ks[0], (d, f), d ** -0.5, dtype),
+        "w_up": _init(ks[1], (d, f), d ** -0.5, dtype),
+        "w_down": _init(ks[2], (f, d), f ** -0.5, dtype),
+    }
+
+
+def mlp(cfg, p, x, d_ff=None):
+    act = jax.nn.silu if cfg.mlp_act == "silu" else \
+        functools.partial(jax.nn.gelu, approximate=True)
+    if cfg.ffn_sparsity is not None:
+        d, f = cfg.d_model, d_ff or cfg.d_ff
+        _, meta_in = sparse_linear_specs(d, f, cfg.ffn_sparsity)
+        _, meta_out = sparse_linear_specs(f, d, cfg.ffn_sparsity)
+        g = apply_sparse_linear(p["gate"], meta_in, x, cfg.ffn_sparsity)
+        u = apply_sparse_linear(p["up"], meta_in, x, cfg.ffn_sparsity)
+        return apply_sparse_linear(p["down"], meta_out, act(g) * u,
+                                   cfg.ffn_sparsity)
+    return _dense(act(_dense(x, p["w_gate"])) * _dense(x, p["w_up"]),
+                  p["w_down"])

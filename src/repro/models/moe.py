@@ -1,0 +1,168 @@
+"""Mixture-of-Experts FFN (DeepSeek-V2 style: shared + routed top-k).
+
+Two dispatch implementations:
+
+  * ``gather`` (default) — sort/scatter-based capacity dispatch computed PER
+    BATCH ROW (capacity C = cf * L * k / E per row).  Token movement is
+    gathers/scatters (zero matmul FLOPs); expert FFN is the only dense
+    compute.  Shards cleanly: rows over `data`, experts over `model` (EP) —
+    the cross-shard token exchange lowers to the all-to-all-class collective
+    a real EP implementation performs.
+
+  * ``einsum``  — the classic GShard one-hot dispatch-einsum formulation.
+    Kept as a benchmark arm: its dispatch tensors/FLOPs are the well-known
+    scaling trap (see EXPERIMENTS.md §Perf for the measured difference).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
+
+from repro.launch.constrain import BATCH, MODEL, constrain
+from repro.models.layers import _dense, _init, mlp
+
+
+def init_moe(cfg, key, dtype):
+    d, f = cfg.d_model, cfg.expert_d_ff
+    e = cfg.n_experts
+    ks = jax.random.split(key, 5)
+    s = d ** -0.5
+    p = {
+        "router": _init(ks[0], (d, e), s, jnp.float32),
+        "w_gate": _init(ks[1], (e, d, f), s, dtype),
+        "w_up": _init(ks[2], (e, d, f), s, dtype),
+        "w_down": _init(ks[3], (e, f, d), f ** -0.5, dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        kss = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": _init(kss[0], (d, fs), s, dtype),
+            "w_up": _init(kss[1], (d, fs), s, dtype),
+            "w_down": _init(kss[2], (fs, d), fs ** -0.5, dtype),
+        }
+    return p
+
+
+def _route(cfg, p, xt):
+    """xt [..., T, D] -> (gate_vals, gate_idx, aux)."""
+    e, k = cfg.n_experts, cfg.moe_top_k
+    logits = jnp.einsum("...td,de->...te", xt.astype(jnp.float32),
+                        p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+    # Switch-style load-balance loss
+    me = probs.mean(axis=tuple(range(probs.ndim - 1)))
+    onehot_mean = jnp.zeros((e,), jnp.float32).at[gate_idx.reshape(-1)].add(
+        1.0 / gate_idx.size)
+    aux = e * jnp.sum(me * onehot_mean)
+    return gate_vals, gate_idx, aux
+
+
+def _expert_mlp(cfg, p, xin):
+    """xin [..., E, C, D] -> [..., E, C, D]"""
+    act = jax.nn.silu if cfg.mlp_act == "silu" else jax.nn.gelu
+    h = act(jnp.einsum("...ecd,edf->...ecf", xin, p["w_gate"])) * \
+        jnp.einsum("...ecd,edf->...ecf", xin, p["w_up"])
+    return jnp.einsum("...ecf,efd->...ecd", h, p["w_down"])
+
+
+# ------------------------------------------------------------ gather dispatch
+def _dispatch_row(e_flat):
+    """Per-row slot assignment.  e_flat [Lk] = expert of each (token,slot);
+    returns pos [Lk]: position within that expert's queue (stable order)."""
+    Lk = e_flat.shape[0]
+    order = jnp.argsort(e_flat, stable=True)
+    sorted_e = e_flat[order]
+    r = jnp.arange(Lk, dtype=jnp.int32)
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos_sorted = (r - first).astype(jnp.int32)
+    return jnp.zeros((Lk,), jnp.int32).at[order].set(pos_sorted)
+
+
+def _moe_gather(cfg, p, x):
+    """x [B, L, D]; per-row capacity; gather/scatter token movement."""
+    B, L, D = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    C = int(cfg.capacity_factor * L * k / e) + 1
+
+    gate_vals, gate_idx, aux = _route(cfg, p, x)          # [B,L,k]
+    e_flat = gate_idx.reshape(B, L * k)
+    pos = jax.vmap(_dispatch_row)(e_flat)                 # [B, Lk]
+    keep = pos < C
+    tok = jnp.tile(jnp.arange(L, dtype=jnp.int32)[:, None],
+                   (1, k)).reshape(L * k)
+
+    # scatter token index / gate weight into the [E, C] slot tables; dropped
+    # entries get an out-of-bounds expert id, discarded by mode="drop"
+    gates_flat = gate_vals.reshape(B, L * k)
+
+    def scatter_row(ef, ps, kp, gv):
+        ii = (jnp.where(kp, ef, e), jnp.where(kp, ps, 0))
+        st = jnp.full((e, C), L, jnp.int32).at[ii].set(tok, mode="drop")
+        sw = jnp.zeros((e, C), jnp.float32).at[ii].set(gv, mode="drop")
+        return st, sw
+    slot_tok, slot_w = jax.vmap(scatter_row)(e_flat, pos, keep, gates_flat)
+
+    x_pad = jnp.concatenate(
+        [x, jnp.zeros((B, 1, D), x.dtype)], axis=1)       # pad row L -> zeros
+    xin = jax.vmap(lambda xp, st: xp[st])(x_pad, slot_tok)  # [B, E, C, D]
+    xin = constrain(xin, BATCH, MODEL)                     # rows x EP
+
+    eout = _expert_mlp(cfg, p, xin)                        # [B, E, C, D]
+    eout = constrain(eout, BATCH, MODEL)
+    eout = _checkpoint_name(eout, "moe_eout")
+
+    # combine: scatter-add each slot's gate-weighted output back to its
+    # token (expert-sharded partial sums -> one psum of [B, L, D] — §Perf B1;
+    # the gather-based combine all-gathered the full [B, E, C, D] instead)
+    contrib = eout * slot_w[..., None].astype(eout.dtype)  # [B, E, C, D]
+
+    def combine_row(st, cb):
+        y = jnp.zeros((L + 1, D), cb.dtype)
+        return y.at[st.reshape(e * C)].add(cb.reshape(e * C, D))
+    y = jax.vmap(combine_row)(slot_tok, contrib)[:, :L]
+    y = constrain(y, BATCH)
+    return y.astype(x.dtype), aux
+
+
+# ------------------------------------------------------------ einsum dispatch
+def _moe_einsum(cfg, p, x):
+    """GShard one-hot dispatch (benchmark arm)."""
+    B, L, D = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    C = int(cfg.capacity_factor * L * k / e) + 1
+    gate_vals, gate_idx, aux = _route(cfg, p, x)
+
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)   # [B,L,k,E]
+    flat = onehot.reshape(B, L * k, e)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(B, L, k, e)
+    pos = jnp.sum(pos * onehot, axis=-1)                      # [B,L,k]
+    keep = pos < C
+    pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * \
+        keep[..., None].astype(jnp.float32)
+    dispatch = jnp.einsum("blke,blkc->blec", onehot, pos_oh)
+    combine = jnp.einsum("blke,blkc,blk->blec", onehot, pos_oh,
+                         gate_vals.astype(jnp.float32))
+    xin = jnp.einsum("blec,bld->becd", dispatch.astype(x.dtype), x)
+    eout = _expert_mlp(cfg, p, xin)
+    y = jnp.einsum("blec,becd->bld", combine.astype(x.dtype), eout)
+    return y, aux
+
+
+def moe_ffn(cfg, p, x, dispatch: str = "gather"
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B, L, D] -> (y [B, L, D], aux_loss scalar)."""
+    if dispatch == "gather":
+        y, aux = _moe_gather(cfg, p, x)
+    else:
+        y, aux = _moe_einsum(cfg, p, x)
+    if cfg.n_shared_experts:
+        Bt, L, D = x.shape
+        fs = cfg.expert_d_ff * cfg.n_shared_experts
+        y = y + mlp(cfg, p["shared"], x, d_ff=fs)
+    return y, aux

@@ -1,0 +1,200 @@
+"""Mamba2 block — SSD (state-space duality) algorithm, arXiv:2405.21060.
+
+Chunked linear-time training/prefill path (quadratic only within a chunk)
+and O(1)-state decode path.  Layout per block:
+
+  in_proj: x -> [z (d_inner), xBC (d_inner + 2*G*N), dt (H)]
+  depthwise causal conv (width 4) over xBC, silu
+  split xBC -> x_ssm [H, P], B [G, N], C [G, N]
+  SSD recurrence with per-head decay a = exp(dt * A)  (A < 0)
+  y = gated_rms_norm(y, z) -> out_proj
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense, _init, rms_norm
+from repro.models import unroll as U
+
+
+def init_ssd(cfg, key, dtype):
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, hh = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    cw = cfg.ssm_conv_width
+    d_xbc = di + 2 * g * n
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "w_in": _init(ks[0], (d, di + d_xbc + hh), s, dtype),
+        "conv_w": _init(ks[1], (cw, d_xbc), cw ** -0.5, dtype),
+        "conv_b": jnp.zeros((d_xbc,), dtype),
+        "A_log": jnp.zeros((hh,), jnp.float32),          # A = -exp(A_log)
+        "D": jnp.ones((hh,), jnp.float32),
+        "dt_bias": jnp.zeros((hh,), jnp.float32),
+        "norm": jnp.zeros((di,), jnp.float32),
+        "w_out": _init(ks[2], (di, d), di ** -0.5, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x [B, L, C], w [cw, C] -> [B, L, C]."""
+    cw = w.shape[0]
+    x_pad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(x_pad[:, i:i + x.shape[1]] * w[i] for i in range(cw))
+    return out + b
+
+
+def _segsum(l):
+    """log-decay cumulative segment sums: l [..., T] ->
+    S[..., i, j] = sum_{k=j+1..i} l_k (i >= j), -inf above diagonal."""
+    T = l.shape[-1]
+    cs = jnp.cumsum(l, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # sum_{j+1..i}
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(x, dt, A, B, C, D, chunk: int):
+    """Chunked SSD: x [b,L,H,P], dt [b,L,H] (post-softplus), A [H] (negative),
+    B,C [b,L,G,N], D [H].  Returns (y [b,L,H,P], final_state [b,H,P,N])."""
+    b, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+
+    # broadcast groups to heads
+    Bh = jnp.repeat(B, rep, axis=2)                      # [b,L,H,N]
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    xr = x.reshape(b, nc, chunk, H, P)
+    dtr = dt.reshape(b, nc, chunk, H)
+    Br = Bh.reshape(b, nc, chunk, H, N)
+    Cr = Ch.reshape(b, nc, chunk, H, N)
+
+    l = dtr * A                                           # [b,nc,c,H] log-decay
+    l_t = l.transpose(0, 1, 3, 2)                         # [b,nc,H,c]
+    seg = jnp.exp(_segsum(l_t))                           # [b,nc,H,c,c]
+
+    xdt = xr * dtr[..., None]                             # weight inputs by dt
+
+    # ---- intra-chunk (quadratic within chunk)
+    scores = jnp.einsum("bzihn,bzjhn->bzhij", Cr.astype(jnp.float32),
+                        Br.astype(jnp.float32))
+    y_diag = jnp.einsum("bzhij,bzjhp->bzihp", scores * seg,
+                        xdt.astype(jnp.float32))
+
+    # ---- chunk-final states
+    cum = jnp.cumsum(l_t, axis=-1)
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)           # [b,nc,H,c]
+    states = jnp.einsum("bzjhn,bzhj,bzjhp->bzhpn", Br.astype(jnp.float32),
+                        decay_to_end, xdt.astype(jnp.float32))
+
+    # ---- inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(cum[..., -1])                   # [b,nc,H]
+
+    def step(h_prev, inp):
+        st, dec = inp                                     # [b,H,P,N], [b,H]
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    h0 = jnp.zeros((b, H, P, N), jnp.float32)
+    h_final, h_prevs = U.scan(
+        step, h0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)            # [b,nc,H,P,N]
+
+    # ---- inter-chunk contribution
+    decay_from_start = jnp.exp(cum)                       # [b,nc,H,c]
+    y_off = jnp.einsum("bzihn,bzhi,bzhpn->bzihp", Cr.astype(jnp.float32),
+                       decay_from_start, h_prevs)
+
+    y = (y_diag + y_off).reshape(b, L, H, P)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y, h_final
+
+
+def ssd_decode_step(x, dt, A, B, C, D, state):
+    """One-token recurrence: x [b,H,P], dt [b,H], B,C [b,G,N],
+    state [b,H,P,N] -> (y [b,H,P], new_state)."""
+    b, H, P = x.shape
+    G, N = B.shape[1], B.shape[2]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=1).astype(jnp.float32)   # [b,H,N]
+    Ch = jnp.repeat(C, rep, axis=1).astype(jnp.float32)
+    decay = jnp.exp(dt * A)                               # [b,H]
+    upd = jnp.einsum("bhp,bhn->bhpn", (x * dt[..., None]).astype(jnp.float32),
+                     Bh)
+    new_state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    y = y + x.astype(jnp.float32) * D[None, :, None]
+    return y, new_state
+
+
+def ssd_block(cfg, p, x, *, cache=None, pos=None):
+    """Full Mamba2 mixer.  cache = {"conv": [B, cw-1, d_xbc],
+    "state": [B, H, P, N]} for decode; None for train; for prefill the
+    returned cache holds the final state."""
+    Bt, L, D = x.shape
+    di = cfg.d_inner
+    g, n, hh = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    cw = cfg.ssm_conv_width
+    d_xbc = di + 2 * g * n
+
+    zxbcdt = _dense(x, p["w_in"])
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + d_xbc]
+    dt_raw = zxbcdt[..., di + d_xbc:]
+    A = -jnp.exp(p["A_log"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+
+    if cache is not None and L == 1:
+        # ---- decode: roll the conv window, single recurrence step
+        conv_st = cache["conv"]                           # [B, cw-1, d_xbc]
+        window = jnp.concatenate([conv_st, xbc], axis=1)  # [B, cw, d_xbc]
+        conv_out = jnp.einsum("btc,tc->bc", window, p["conv_w"]) + p["conv_b"]
+        xbc_c = jax.nn.silu(conv_out)[:, None]            # [B, 1, d_xbc]
+        new_conv = window[:, 1:]
+        x_ssm = xbc_c[..., :di].reshape(Bt, hh, P)
+        Bm = xbc_c[..., di:di + g * n].reshape(Bt, g, n)
+        Cm = xbc_c[..., di + g * n:].reshape(Bt, g, n)
+        y, new_state = ssd_decode_step(x_ssm, dt[:, 0], A, Bm, Cm,
+                                       p["D"], cache["state"])
+        y = y.reshape(Bt, 1, di)
+        new_cache = {"conv": new_conv, "state": new_state}
+    else:
+        xbc_c = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+        x_ssm = xbc_c[..., :di].reshape(Bt, L, hh, P)
+        Bm = xbc_c[..., di:di + g * n].reshape(Bt, L, g, n)
+        Cm = xbc_c[..., di + g * n:].reshape(Bt, L, g, n)
+        y, final_state = ssd_scan(x_ssm, dt, A, Bm, Cm, p["D"],
+                                  min(cfg.ssm_chunk, L))
+        y = y.reshape(Bt, L, di)
+        if cache is not None:                             # prefill
+            new_conv = jnp.swapaxes(
+                jax.lax.dynamic_slice_in_dim(
+                    jnp.swapaxes(xbc, 1, 2), L - (cw - 1), cw - 1, axis=2),
+                1, 2)
+            new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                         "state": final_state}
+        else:
+            new_cache = None
+
+    # gated RMS norm then out-projection
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"])
+    return _dense(y, p["w_out"]), new_cache
+
+
+def init_ssd_cache(cfg, batch, dtype):
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    d_xbc = cfg.d_inner + 2 * g * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, d_xbc), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, n),
+                           jnp.float32),
+    }

@@ -1,0 +1,51 @@
+"""Global scan-unroll switch.
+
+XLA's ``cost_analysis`` counts a ``while`` body ONCE regardless of trip
+count, so scanned layer stacks undercount FLOPs/bytes/collectives.  The
+dry-run's cost-extrapolation mode sets ``unroll_scans()`` and compiles small
+unrolled variants (1-2 repeats) to fit an affine cost model in the repeat
+count; the full scanned compile is still used for the memory/sharding proof.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_UNROLL = False
+
+
+def unrolled() -> bool:
+    return _UNROLL
+
+
+@contextlib.contextmanager
+def unroll_scans():
+    global _UNROLL
+    prev = _UNROLL
+    _UNROLL = True
+    try:
+        yield
+    finally:
+        _UNROLL = prev
+
+
+def scan(body, carry, xs, length=None):
+    """jax.lax.scan, or a python loop when unroll mode is active."""
+    if not _UNROLL:
+        return jax.lax.scan(body, carry, xs, length=length)
+    if xs is None:
+        n = length
+        get = lambda i: None
+    else:
+        n = jax.tree.leaves(xs)[0].shape[0]
+        get = lambda i: jax.tree.map(lambda a: a[i], xs)
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, get(i))
+        ys.append(y)
+    if not ys or all(y is None for y in ys):
+        return carry, None
+    import jax.numpy as jnp
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    return carry, stacked

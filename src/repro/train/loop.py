@@ -1,0 +1,139 @@
+"""Training loop with large-scale fault-tolerance mechanics:
+
+  * checkpoint/restart — async CheckpointManager; on (re)start the loop
+    resumes from the latest checkpoint automatically;
+  * failure injection — ``fail_at_step`` raises SimulatedFailure mid-run
+    (the launcher catches it and relaunches; see launch/train.py);
+  * straggler watchdog — EWMA of step times; steps slower than
+    ``straggler_factor`` x EWMA are logged with their step index (on a real
+    pod this signal feeds the controller's hot-spare swap);
+  * elastic re-mesh — checkpoints are mesh-agnostic, so a relaunch on a
+    different device count re-shards transparently;
+  * optional int8 error-feedback gradient compression over the data axis
+    (shard_map path, for cross-pod DCI relief).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.data.pipeline import DataConfig, make_batch
+from repro.launch import sharding as sh
+from repro.launch import steps as st
+from repro.models import transformer as T
+from repro.optim import adamw
+
+log = logging.getLogger("repro.train")
+
+
+class SimulatedFailure(RuntimeError):
+    """Injected node failure (exercise the restart path)."""
+
+
+@dataclasses.dataclass
+class TrainResult:
+    final_step: int
+    losses: list
+    step_times: list
+    restarts_used: int
+    straggler_steps: list
+
+
+def train(cfg: ModelConfig, shape: ShapeCell, mesh, *,
+          total_steps: int = 50,
+          opt_cfg: Optional[adamw.AdamWConfig] = None,
+          ckpt_dir: Optional[str] = None,
+          ckpt_every: int = 20,
+          fail_at_step: Optional[int] = None,
+          straggler_factor: float = 3.0,
+          remat: str = "none",
+          data_cfg: DataConfig = DataConfig(),
+          log_every: int = 10) -> TrainResult:
+    opt_cfg = opt_cfg or adamw.AdamWConfig(total_steps=total_steps)
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+
+    params_specs = T.param_specs(cfg)
+    p_shard = sh.param_shardings(mesh, params_specs)
+    o_specs = jax.eval_shape(adamw.init, params_specs)
+    o_shard = sh.opt_state_shardings(mesh, o_specs)
+    b_specs = st.input_specs(cfg, shape)
+    b_shard = sh.batch_shardings(mesh, b_specs)
+
+    with mesh:
+        train_step = jax.jit(
+            st.make_train_step(cfg, opt_cfg, remat=remat),
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1))
+
+        # ---- init or resume
+        start_step = 0
+        if mgr and mgr.latest_step() is not None:
+            like = {"params": params_specs, "opt": o_specs}
+            state, start_step = mgr.restore(
+                like, shardings={"params": p_shard, "opt": o_shard})
+            params, opt_state = state["params"], state["opt"]
+            log.info("resumed from step %d (elastic re-shard onto %s)",
+                     start_step, mesh.devices.shape)
+        else:
+            params = jax.device_put(T.init_params(cfg, seed=0), p_shard)
+            opt_state = jax.device_put(adamw.init(params), o_shard)
+
+        losses, times, stragglers = [], [], []
+        ewma = None
+        for step in range(start_step, total_steps):
+            if fail_at_step is not None and step == fail_at_step:
+                raise SimulatedFailure(f"injected failure at step {step}")
+            batch = jax.device_put(
+                make_batch(cfg, shape, step, data_cfg), b_shard)
+            t0 = time.time()
+            params, opt_state, metrics = train_step(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            losses.append(loss)
+            times.append(dt)
+            if ewma is None:
+                ewma = dt
+            else:
+                if dt > straggler_factor * ewma:
+                    stragglers.append(step)
+                    log.warning("straggler suspected at step %d: "
+                                "%.2fs vs EWMA %.2fs", step, dt, ewma)
+                ewma = 0.9 * ewma + 0.1 * dt
+            if step % log_every == 0:
+                log.info("step %d loss %.4f (%.2fs)", step, loss, dt)
+            if mgr and (step + 1) % ckpt_every == 0:
+                mgr.save(step + 1,
+                         {"params": params, "opt": opt_state})
+        if mgr:
+            mgr.save(total_steps, {"params": params, "opt": opt_state},
+                     block=True)
+    return TrainResult(total_steps, losses, times, 0, stragglers)
+
+
+def train_with_restarts(cfg, shape, mesh_factory, *, max_restarts: int = 2,
+                        **kw) -> TrainResult:
+    """The launcher: retries after (injected or real) failures; each retry
+    rebuilds the mesh (elastic: the new mesh may differ) and resumes from
+    the latest checkpoint."""
+    restarts = 0
+    fail_at = kw.pop("fail_at_step", None)
+    while True:
+        try:
+            mesh = mesh_factory(restarts)
+            res = train(cfg, shape, mesh, fail_at_step=fail_at, **kw)
+            res = dataclasses.replace(res, restarts_used=restarts)
+            return res
+        except SimulatedFailure as e:
+            restarts += 1
+            fail_at = None                       # only fail once
+            log.warning("%s -> restart %d/%d", e, restarts, max_restarts)
+            if restarts > max_restarts:
+                raise

@@ -1,0 +1,194 @@
+"""Core library tests: BCSR format invariants, reordering, perf model,
+sparse linear layer (incl. hypothesis property tests)."""
+import numpy as np
+import scipy.sparse as sp
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bcsr as bcsr_lib
+from repro.core import perf_model, reorder, topology
+from repro.core.sparse_linear import (SparsitySpec, apply_sparse_linear,
+                                      init_sparse_linear,
+                                      sparse_linear_specs)
+from repro.kernels import ops
+
+
+# ------------------------------------------------------------------ BCSR core
+def test_from_dense_roundtrip():
+    rng = np.random.default_rng(0)
+    dense = rng.standard_normal((60, 90)).astype(np.float32)
+    dense[np.abs(dense) < 1.2] = 0
+    a = bcsr_lib.from_dense(dense, (8, 16))
+    np.testing.assert_array_equal(a.to_dense(), dense)
+
+
+def test_from_csr_matches_from_dense():
+    rng = np.random.default_rng(1)
+    dense = rng.standard_normal((64, 64)).astype(np.float32)
+    dense[np.abs(dense) < 1.0] = 0
+    csr = sp.csr_matrix(dense)
+    a = bcsr_lib.from_csr(csr.indptr, csr.indices, csr.data, csr.shape,
+                          (16, 16))
+    b = bcsr_lib.from_dense(dense, (16, 16))
+    np.testing.assert_array_equal(a.to_dense(), b.to_dense())
+    assert a.nnzb == b.nnzb
+
+
+def test_transpose_structure():
+    a = bcsr_lib.random_bcsr(2, (96, 64), (16, 16), 0.4)
+    at = a.transpose()
+    np.testing.assert_allclose(at.to_dense(), a.to_dense().T)
+    # sorted row-major
+    assert np.all(np.diff(at.row_ids) >= 0)
+
+
+def test_eq2_bounds():
+    a = bcsr_lib.random_bcsr(3, (128, 128), (16, 16), 0.3, fill_density=0.5)
+    lo, hi = a.block_bounds()
+    assert lo <= a.nnzb <= hi
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(2, 8), k=st.integers(2, 8),
+    h=st.sampled_from([4, 8]), w=st.sampled_from([4, 8]),
+    density=st.floats(0.05, 0.9), seed=st.integers(0, 1000),
+)
+def test_property_bcsr_roundtrip_and_bounds(m, k, h, w, density, seed):
+    """Property: from_dense/to_dense roundtrip exactly; Eq.2 bounds hold;
+    ensure_nonempty_rows preserves the dense matrix and kills empty rows."""
+    a = bcsr_lib.random_bcsr(seed, (m * h, k * w), (h, w), density)
+    dense = a.to_dense()
+    b = bcsr_lib.from_dense(dense, (h, w))
+    np.testing.assert_array_equal(b.to_dense(), dense)
+    lo, hi = b.block_bounds()
+    assert lo <= max(b.nnzb, 1) and b.nnzb <= hi + 1
+    c = a.ensure_nonempty_rows()
+    np.testing.assert_array_equal(c.to_dense(), dense)
+    assert np.all(np.diff(c.rowptr) >= 1)
+    assert np.all(np.diff(c.row_ids) >= 0)          # still sorted
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 100), density=st.floats(0.1, 0.6))
+def test_property_spmm_linear(seed, density):
+    """Property: SpMM is linear — A(x+y) == Ax + Ay and A(cx) == c Ax."""
+    a = bcsr_lib.random_bcsr(seed, (32, 48), (8, 8), density)
+    a = a.ensure_nonempty_rows()
+    arrays, meta = ops.prepare_sparse(a, dtype=jnp.float32)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((48, 8)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((48, 8)).astype(np.float32))
+    f = lambda v: ops.spmm(arrays, meta, v, backend="xla")
+    np.testing.assert_allclose(np.asarray(f(x + y)),
+                               np.asarray(f(x) + f(y)), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(f(3.0 * x)),
+                               np.asarray(3.0 * f(x)), rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ reordering
+def test_jaccard_reduces_blocks_on_clustered_matrix():
+    csr = topology.blocked_random(n=768, nnz_target=12_000, cluster=32,
+                                  seed=0)
+    block = (16, 16)
+    before = bcsr_lib.from_scipy(csr, block).nnzb
+    perm = reorder.jaccard_rows(csr, block_w=16, tau=0.7)
+    after = bcsr_lib.from_scipy(reorder.apply_perm(csr, perm), block).nnzb
+    assert sorted(perm.tolist()) == list(range(csr.shape[0]))  # permutation
+    assert after < before, (before, after)
+
+
+def test_jaccard_identity_on_band_matrix():
+    """Paper IV-C: band matrices are already block-dense; reordering must not
+    blow up the block count (it may perturb slightly)."""
+    csr = topology.band(512, 16)
+    block = (16, 16)
+    before = bcsr_lib.from_scipy(csr, block).nnzb
+    perm = reorder.jaccard_rows(csr, block_w=16, tau=0.7)
+    after = bcsr_lib.from_scipy(reorder.apply_perm(csr, perm), block).nnzb
+    assert after <= before * 1.6
+
+
+def test_rcm_permutation_valid():
+    csr = topology.power_law(512, 6.0, seed=1)
+    perm = reorder.rcm(csr)
+    assert sorted(perm.tolist()) == list(range(512))
+
+
+def test_shard_balance_reduces_imbalance():
+    a = bcsr_lib.from_scipy(topology.power_law(1024, 8.0, seed=2), (16, 16))
+    n_shards = 8
+    bpr = a.blocks_per_row()
+
+    def shard_loads(order):
+        per = np.array_split(order, n_shards)
+        return np.array([bpr[idx].sum() for idx in per])
+
+    natural = shard_loads(np.arange(a.n_block_rows))
+    balanced = shard_loads(reorder.shard_balance(a.row_ids, a.rowptr,
+                                                 n_shards))
+    assert balanced.std() <= natural.std()
+
+
+# ------------------------------------------------------------------ perf model
+def test_perf_model_fit_recovers_linear():
+    rng = np.random.default_rng(3)
+    n_e = np.linspace(100, 10000, 20)
+    t = 3e-6 * n_e + 2e-4 + rng.normal(0, 1e-6, 20)
+    f = perf_model.fit(n_e, t)
+    assert abs(f.t_e - 3e-6) / 3e-6 < 0.05
+    assert f.r2 > 0.99
+
+
+def test_block_roofline_sane():
+    t_c, t_m, t_e = perf_model.block_mma_time(128, 128, 512)
+    assert t_e == max(t_c, t_m) > 0
+    # dense crossover: at high density BCSR time ~ dense time
+    m = k = 16384
+    t_dense = perf_model.dense_gemm_time(m, k, 128)
+    n_e_full = (m // 128) * (k // 128)
+    t_sparse_full = perf_model.spmm_model_time(n_e_full, 128, 128, 128)
+    assert 0.2 < t_sparse_full / t_dense < 5
+
+
+# ------------------------------------------------------------- sparse linear
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_sparse_linear_forward_and_grad(backend):
+    spec = SparsitySpec(density=0.3, block=(16, 16), backend=backend,
+                        bn=128, interpret=True)
+    params, meta = init_sparse_linear(0, 64, 96, spec, dtype=jnp.float32)
+    x = jnp.asarray(np.random.default_rng(4).standard_normal(
+        (2, 8, 64)).astype(np.float32))
+    y = apply_sparse_linear(params, meta, x, spec)
+    assert y.shape == (2, 8, 96)
+    dense_w = ops.materialize_dense(
+        ops.SparseArrays(params["vals"], params["row_ids"],
+                         params["col_ids"], params["real_mask"],
+                         params["t_perm"], params["t_row_ids"],
+                         params["t_col_ids"]), meta)[:96, :64]
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(x @ dense_w.T), rtol=1e-3,
+                               atol=1e-3)
+
+    def loss(p):
+        return jnp.sum(apply_sparse_linear(p, meta, x, spec) ** 2)
+
+    # int/bool index leaves get float0 cotangents (the train step does the
+    # same via allow_int)
+    g = jax.grad(loss, allow_int=True)(params)
+    assert g["vals"].shape == params["vals"].shape
+    assert np.isfinite(np.asarray(g["vals"], np.float32)).all()
+    assert float(jnp.abs(g["vals"]).sum()) > 0
+
+
+def test_sparse_linear_specs_match_init():
+    spec = SparsitySpec(density=0.25, block=(16, 16))
+    params, meta = init_sparse_linear(1, 128, 128, spec)
+    specs, meta_s = sparse_linear_specs(128, 128, spec)
+    assert meta.nnzb == meta_s.nnzb
+    assert meta.shape == meta_s.shape
+    for k in params:
+        assert params[k].shape == specs[k].shape, k
+        assert params[k].dtype == specs[k].dtype, k

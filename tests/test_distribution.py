@@ -1,0 +1,140 @@
+"""Distribution-layer unit tests: MoE dispatch arms, unroll-mode scan
+equivalence, serve-mode sharding rules, sharding fit logic."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch import mesh as mesh_lib
+from repro.launch import sharding as sh
+from repro.models import moe as M
+from repro.models import transformer as T
+from repro.models import unroll as U
+
+
+# ----------------------------------------------------------------- MoE arms
+def test_moe_gather_matches_einsum_dispatch():
+    """The scatter/gather dispatch (ours) and the GShard one-hot einsum
+    (reference) implement the same routing semantics — identical outputs
+    up to slot-assignment order when capacity is not exceeded."""
+    cfg = dataclasses.replace(get_config("deepseek-v2-lite-16b:smoke"),
+                              dtype="float32", capacity_factor=8.0)
+    key = jax.random.PRNGKey(0)
+    p = M.init_moe(cfg, key, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    y_g, aux_g = M.moe_ffn(cfg, p, x, dispatch="gather")
+    y_e, aux_e = M.moe_ffn(cfg, p, x, dispatch="einsum")
+    np.testing.assert_allclose(np.asarray(y_g), np.asarray(y_e),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(aux_g), float(aux_e), rtol=1e-5)
+
+
+def test_moe_gather_respects_capacity():
+    """With capacity_factor ~0, (almost) all tokens are dropped and only the
+    shared-expert path contributes."""
+    cfg = dataclasses.replace(get_config("deepseek-v2-lite-16b:smoke"),
+                              dtype="float32", capacity_factor=1e-9)
+    p = M.init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model))
+    y_full, _ = M.moe_ffn(cfg, p, x, dispatch="gather")
+    # capacity floor is 1 slot/expert; outputs must stay finite and bounded
+    assert np.isfinite(np.asarray(y_full)).all()
+
+
+def test_moe_gather_grads_flow():
+    cfg = dataclasses.replace(get_config("deepseek-v2-lite-16b:smoke"),
+                              dtype="float32")
+    p = M.init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model))
+
+    def loss(p):
+        y, aux = M.moe_ffn(cfg, p, x, dispatch="gather")
+        return jnp.sum(y ** 2) + aux
+
+    g = jax.grad(loss)(p)
+    for name in ("w_gate", "w_up", "w_down", "router"):
+        assert float(jnp.abs(g[name]).sum()) > 0, name
+
+
+# ------------------------------------------------------------- unroll mode
+@pytest.mark.parametrize("arch", ["h2o-danube-1.8b", "mamba2-1.3b",
+                                  "zamba2-7b", "deepseek-v2-lite-16b"])
+def test_unrolled_forward_matches_scanned(arch):
+    """Cost-extrapolation depends on unrolled == scanned semantics."""
+    cfg = dataclasses.replace(get_config(arch + ":smoke"), dtype="float32")
+    params = T.init_params(cfg, seed=0)
+    toks = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (1, 32)),
+        jnp.int32)
+    logits_scan, _, _ = T.forward(cfg, params, {"tokens": toks})
+    with U.unroll_scans():
+        logits_unroll, _, _ = T.forward(cfg, params, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(logits_scan),
+                               np.asarray(logits_unroll),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------- shardings
+def _mesh():
+    # AbstractMesh: axis names/sizes without needing >1 real device
+    from jax.sharding import AbstractMesh
+    return AbstractMesh((2, 2), ("data", "model"))
+
+
+def test_fit_spec_drops_nondivisible_axes():
+    mesh = _mesh()
+    spec = sh.fit_spec(mesh, P("data", "model"), (4, 3))
+    assert spec == P("data", None)          # 3 % 2 != 0 -> dropped
+    spec = sh.fit_spec(mesh, P(("data", "model"), None), (2, 8))
+    assert spec == P(("data",), None) or spec == P("data", None)
+
+
+def test_serve_mode_strips_fsdp():
+    mesh = _mesh()
+    cfg = get_config("qwen2.5-14b:smoke")
+    specs = T.param_specs(cfg)
+    train_sh = sh.param_shardings(mesh, specs, mode="train")
+    serve_sh = sh.param_shardings(mesh, specs, mode="serve")
+
+    def axes_used(shardings):
+        used = set()
+        for s in jax.tree.leaves(shardings):
+            for a in s.spec:
+                if isinstance(a, tuple):
+                    used.update(a)
+                elif a is not None:
+                    used.add(a)
+        return used
+
+    assert "data" in axes_used(train_sh)            # FSDP on
+    assert "data" not in axes_used(serve_sh)        # FSDP off for serving
+    assert "model" in axes_used(serve_sh)           # TP stays
+
+
+def test_cache_seq_shard_for_single_request():
+    mesh = _mesh()
+    cfg = get_config("gemma2-27b:smoke")
+    cs = T.cache_specs(cfg, 1, 256)
+    shard = sh.cache_shardings(mesh, cs, cfg, seq_shard=True)
+    leaves = jax.tree_util.tree_flatten_with_path(shard)[0]
+    k_leaves = [s for p, s in leaves
+                if getattr(p[-1], "key", None) == "k"]
+    assert k_leaves
+    for s in k_leaves:
+        # batch dim unsharded (B=1), sequence dim carries the data axes
+        b_dim_axis = s.spec[-4]
+        seq_axis = s.spec[-3]
+        assert b_dim_axis is None
+        assert seq_axis is not None
+
+
+def test_batch_sharding_replicates_batch_of_one():
+    mesh = _mesh()
+    specs = {"tokens": jax.ShapeDtypeStruct((1, 64), jnp.int32)}
+    b = sh.batch_shardings(mesh, specs)
+    assert b["tokens"].spec == P(None, None)

@@ -1,0 +1,157 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+train-grad step and one prefill+decode step on CPU; asserts shapes + no NaNs.
+The FULL configs are exercised only via the dry-run (ShapeDtypeStructs)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import transformer as T
+
+ALL_ARCHS = list_archs()
+B, L = 2, 64
+
+
+def _batch(cfg, rng):
+    batch = {}
+    if cfg.input_mode == "codebooks":
+        toks = rng.integers(0, cfg.vocab_size, size=(B, L, cfg.n_codebooks))
+        batch["tokens"] = jnp.asarray(toks, jnp.int32)
+        batch["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(B, L, cfg.n_codebooks)),
+            jnp.int32)
+    elif cfg.input_mode == "tokens+patches":
+        lt = L - cfg.patch_tokens
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(B, lt)), jnp.int32)
+        batch["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.patch_tokens, cfg.d_model)),
+            jnp.bfloat16)
+        batch["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(B, lt)), jnp.int32)
+    else:
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(B, L)), jnp.int32)
+        batch["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(B, L)), jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch + ":smoke")
+    params = T.init_params(cfg, seed=0)
+    batch = _batch(cfg, np.random.default_rng(0))
+    logits, _, aux = T.forward(cfg, params, batch)
+    if cfg.input_mode == "codebooks":
+        assert logits.shape == (B, L, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (B, L, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_step_grad_finite(arch):
+    cfg = get_config(arch + ":smoke")
+    params = T.init_params(cfg, seed=0)
+    batch = _batch(cfg, np.random.default_rng(1))
+
+    def loss_fn(p):
+        loss, _ = T.train_loss(cfg, p, batch, remat="none")
+        return loss
+
+    loss, grads = jax.value_and_grad(loss_fn, allow_int=True)(params)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+    leaves = [g for g in jax.tree.leaves(grads)
+              if hasattr(g, "dtype") and jnp.issubdtype(g.dtype, jnp.inexact)]
+    assert leaves
+    for g in leaves:
+        assert np.isfinite(np.asarray(g, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_prefill_then_decode(arch):
+    cfg = get_config(arch + ":smoke")
+    params = T.init_params(cfg, seed=0)
+    rng = np.random.default_rng(2)
+    batch = _batch(cfg, rng)
+    cache_len = L
+    logits, cache = T.prefill(cfg, params, batch, cache_len)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    if cfg.input_mode == "codebooks":
+        tok = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                       size=(B, cfg.n_codebooks)), jnp.int32)
+    else:
+        tok = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(B,)),
+                          jnp.int32)
+    seq_pos = L if cfg.input_mode != "tokens+patches" else L
+    dl, cache2 = T.decode_step(cfg, params, cache,
+                               tok, jnp.asarray(seq_pos, jnp.int32))
+    assert np.isfinite(np.asarray(dl, np.float32)).all()
+    # cache actually changed
+    changed = jax.tree.map(
+        lambda a, b: not np.array_equal(np.asarray(a, np.float32),
+                                        np.asarray(b, np.float32)),
+        cache, cache2)
+    assert any(jax.tree.leaves(changed))
+
+
+def test_decode_matches_prefill_dense_arch():
+    """Teacher-forced decode must reproduce prefill logits step by step
+    (h2o-danube: GQA + SWA path)."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config("h2o-danube-1.8b:smoke"),
+                              dtype="float32")
+    params = T.init_params(cfg, seed=0)
+    rng = np.random.default_rng(3)
+    toks = rng.integers(0, cfg.vocab_size, size=(1, 16))
+    full_logits, _, _ = T.forward(
+        cfg, params, {"tokens": jnp.asarray(toks, jnp.int32)})
+
+    cache = T.init_cache(cfg, 1, 16)
+    # feed token 0 via prefill of length 1? decode from scratch instead:
+    outs = []
+    for t in range(16):
+        logits_t, cache = T.decode_step(
+            cfg, params, cache, jnp.asarray(toks[:, t], jnp.int32),
+            jnp.asarray(t, jnp.int32))
+        outs.append(np.asarray(logits_t, np.float32))
+    dec = np.stack(outs, axis=1)
+    np.testing.assert_allclose(dec, np.asarray(full_logits, np.float32),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_decode_matches_prefill_ssm_arch():
+    """Same teacher-forcing check through the Mamba2 recurrence."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config("mamba2-1.3b:smoke"),
+                              dtype="float32")
+    params = T.init_params(cfg, seed=0)
+    rng = np.random.default_rng(4)
+    toks = rng.integers(0, cfg.vocab_size, size=(1, 32))
+    full_logits, _, _ = T.forward(
+        cfg, params, {"tokens": jnp.asarray(toks, jnp.int32)})
+    cache = T.init_cache(cfg, 1, 32)
+    outs = []
+    for t in range(32):
+        logits_t, cache = T.decode_step(
+            cfg, params, cache, jnp.asarray(toks[:, t], jnp.int32),
+            jnp.asarray(t, jnp.int32))
+        outs.append(np.asarray(logits_t, np.float32))
+    dec = np.stack(outs, axis=1)
+    np.testing.assert_allclose(dec, np.asarray(full_logits, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_param_specs_no_alloc_matches_init():
+    cfg = get_config("qwen2.5-14b:smoke")
+    specs = T.param_specs(cfg)
+    params = T.init_params(cfg, seed=0)
+    flat_s = jax.tree.leaves(specs)
+    flat_p = jax.tree.leaves(params)
+    assert len(flat_s) == len(flat_p)
+    for s, p in zip(flat_s, flat_p):
+        assert s.shape == p.shape and s.dtype == p.dtype
