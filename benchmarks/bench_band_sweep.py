@@ -8,7 +8,6 @@ GFLOP/s of each arm plus the measured-CPU ratio, and locate the crossover.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import (effective_gflops, emit, modeled_bcsr_time,
                                modeled_csr_time, modeled_dense_time)

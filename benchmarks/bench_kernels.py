@@ -11,7 +11,6 @@ row-loop pays there (SMaT's documented weakness, fixed by nnz-streaming).
 from __future__ import annotations
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit

@@ -18,7 +18,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-import scipy.sparse as sp
 
 from benchmarks.common import emit, timeit
 from repro.core import bcsr as bcsr_lib

@@ -10,7 +10,6 @@ Claims validated (paper numbers in brackets, scaled suite):
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit
 from repro.core import bcsr as bcsr_lib

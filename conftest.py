@@ -1,0 +1,22 @@
+"""Repo-root pytest conftest.
+
+* Guarantees ``src`` is importable even when the ``pythonpath`` ini option
+  is unavailable (defensive — pyproject.toml sets it too).
+* Installs the deterministic ``hypothesis`` stub when the real package is
+  missing (offline CI container), so property tests run instead of erroring
+  at collection.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    from repro.testing import hypothesis_stub
+    hypothesis_stub.install(sys.modules)

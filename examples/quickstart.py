@@ -37,4 +37,13 @@ y_dense = ops.spmm(arrays, meta, b, backend="dense")
 err = float(jnp.max(jnp.abs(y_pallas - y_dense)))
 print(f"pallas-vs-dense max err: {err:.2e}")
 assert err < 1e-3
+
+# 4. autotuned dispatch: the registry picks (variant, bn) from the matrix's
+# structure fingerprint (cached; run Autotuner.tune for a measured sweep)
+from repro.kernels import autotune
+choice = autotune.get_autotuner().pick(meta, int(b.shape[1]))
+print(f"autotune pick for {autotune.fingerprint(meta, int(b.shape[1])).key()}:"
+      f" {choice.variant}/bn{choice.bn} ({choice.source})")
+y_auto = ops.spmm(arrays, meta, b, backend="auto", interpret=True)
+assert float(jnp.max(jnp.abs(y_auto - y_dense))) < 1e-3
 print("OK")

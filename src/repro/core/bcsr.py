@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 
@@ -76,6 +76,18 @@ class BCSR:
 
     def blocks_per_row(self) -> np.ndarray:
         return np.diff(self.rowptr)
+
+    def dispatch_stats(self) -> Tuple[int, int, int]:
+        """(max_bpr, padding_ratio_pct, bpr_cv_pct) — the structure stats
+        the kernel autotuner fingerprints on.  Single source of truth:
+        ``ops.prepare_sparse`` and ``autotune.fingerprint_bcsr`` must agree
+        bit-for-bit or cached decisions stop matching at lookup time."""
+        bpr = self.blocks_per_row().astype(np.float64)
+        mean = float(bpr.mean()) if bpr.size else 0.0
+        cv = float(bpr.std() / mean) if mean > 0 else 0.0
+        return (int(bpr.max()) if bpr.size else 0,
+                int(round(self.padding_ratio * 100)),
+                int(round(cv * 100)))
 
     def block_bounds(self) -> Tuple[int, int]:
         """Paper Eq. 2 bounds on n_e for this matrix's nnz."""

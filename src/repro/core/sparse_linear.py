@@ -12,7 +12,7 @@ can be stacked along a scan axis (all leaves share shapes).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,12 +24,23 @@ from repro.kernels import ops
 
 @dataclasses.dataclass(frozen=True)
 class SparsitySpec:
-    """Config for a block-sparse weight (the paper's technique toggle)."""
+    """Config for a block-sparse weight (the paper's technique toggle).
+
+    ``backend="auto"`` routes every apply through the
+    ``repro.kernels.autotune`` registry: the variant and N-tile are picked
+    from the weight's structure fingerprint (cached analytic pick unless a
+    measured sweep already ran).  ``tune_n > 0`` additionally runs the
+    timed micro-sweep once at ``init_sparse_linear`` time with ``N =
+    tune_n`` — set it to the expected activation token count (batch x seq
+    of a training/serving step) so the warmed cache bucket is the one
+    apply-time lookups actually hit.
+    """
     density: float = 0.1            # fraction of nonzero blocks
     block: Tuple[int, int] = (128, 128)
-    backend: str = "pallas"         # pallas | xla | dense
+    backend: str = "pallas"         # pallas | row_loop | xla | dense | auto
     bn: int = 512
     interpret: bool = False
+    tune_n: int = 0                 # measured sweep at init for this N
 
 
 def _nnzb_for(spec: SparsitySpec, out_dim: int, in_dim: int) -> int:
@@ -51,6 +62,10 @@ def init_sparse_linear(key: int, in_dim: int, out_dim: int,
         key, (out_dim, in_dim), spec.block, _nnzb_for(spec, out_dim, in_dim),
         dtype=np.float32)
     arrays, meta = ops.prepare_sparse(a, dtype=dtype)
+    if spec.backend == "auto" and spec.tune_n > 0:
+        from repro.kernels import autotune
+        autotune.get_autotuner().tune(a, spec.tune_n,
+                                      interpret=spec.interpret)
     params = {
         "vals": arrays.vals,
         "row_ids": arrays.row_ids,

@@ -15,7 +15,6 @@ import queue
 import threading
 from typing import Dict, Iterator, Optional
 
-import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeCell

@@ -1,3 +1,10 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""SpMM kernel package.
+
+  bcsr_spmm — Pallas TPU kernels (nnz_stream / row_loop / sddmm)
+  ref       — pure-jnp oracles (the ``xla`` backend)
+  ops       — jit-ready public API (``spmm`` with custom VJP + dispatch)
+  autotune  — kernel-variant registry + fingerprint-cached autotuner
+              (``ops.spmm(..., backend="auto")`` routes through it)
+"""
+from repro.kernels import ops
+from repro.kernels.ops import prepare_sparse, spmm

@@ -1,0 +1,393 @@
+"""Kernel-variant registry + autotuned SpMM dispatch.
+
+SMaT's headline speedups come from matching the kernel schedule and tile
+parameters to the matrix's block structure; a single hardcoded
+(nnz_stream, bn=512) leaves that on the table.  This module provides:
+
+  * a **registry** of SpMM kernel variants (nnz_stream / row_loop / xla
+    gather-scatter / dense fallback), each with its tunable ``bn``
+    candidates and dispatch constraints;
+  * a **fingerprint** of a BCSR operand's structure (nnzb, padding ratio,
+    blocks-per-row skew, block shape, N-bucket) — the cache key;
+  * an **autotuner** that, per fingerprint, either consults the paper's
+    performance model (``core.perf_model``, Eq. 1 instantiated with the TPU
+    block roofline) for an analytic pick, or runs a timed micro-sweep over
+    the registered candidates; decisions are cached in-memory and mirrored
+    to a JSON file so benchmarks and serving reuse them across processes.
+
+Wiring: ``ops.spmm(..., backend="auto")`` resolves through
+``get_autotuner().pick`` (static info only — trace-safe); explicit
+``tune()`` calls (benchmarks, offline warmup) run the measured sweep and
+overwrite the analytic entry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Dict, Iterable, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bcsr as bcsr_lib
+from repro.core import perf_model as pm
+from repro.kernels import ops
+
+# hardcoded pre-registry default — the baseline every pick must beat
+DEFAULT_VARIANT = "nnz_stream"
+DEFAULT_BN = 512
+
+# VMEM budget for one grid cell's working set (A block + B tile + f32 acc),
+# conservative vs the ~128 MiB/core so double buffering always fits.
+_VMEM_BUDGET = 8 * 2 ** 20
+
+
+# ------------------------------------------------------------------ registry
+@dataclasses.dataclass(frozen=True)
+class KernelVariant:
+    """One dispatchable SpMM schedule.
+
+    ``backend`` is the ``ops.SpmmConfig.backend`` string the variant lowers
+    to; ``model_time`` maps (meta, n, bn) -> predicted seconds (paper Eq. 1
+    terms from ``core.perf_model``); ``supported`` gates dispatch on static
+    metadata (e.g. row_loop needs a known max_bpr).
+    """
+    name: str
+    backend: str
+    bn_candidates: Tuple[int, ...]
+    model_time: Callable[[ops.SparseMeta, int, int], float]
+    supported: Callable[[ops.SparseMeta], bool] = lambda meta: True
+    description: str = ""
+
+
+_REGISTRY: Dict[str, KernelVariant] = {}
+
+
+def register_variant(v: KernelVariant) -> KernelVariant:
+    if v.name in _REGISTRY:
+        raise ValueError(f"variant {v.name!r} already registered")
+    _REGISTRY[v.name] = v
+    return v
+
+
+def get_variant(name: str) -> KernelVariant:
+    return _REGISTRY[name]
+
+
+def variant_names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def _bytes_per_el(dtype=jnp.bfloat16) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def _n_tiles(n: int, bn: int) -> int:
+    return max(-(-n // bn), 1)  # the kernel pads N up to a bn multiple
+
+
+def _t_nnz_stream(meta: ops.SparseMeta, n: int, bn: int) -> float:
+    h, w = meta.block
+    return pm.spmm_model_time(meta.nnzb * _n_tiles(n, bn), h, w, bn)
+
+
+def _t_row_loop(meta: ops.SparseMeta, n: int, bn: int) -> float:
+    # static schedule pays max_bpr slots on EVERY block-row (SMaT's dc2
+    # worst case); padding DMAs still move bytes.
+    h, w = meta.block
+    n_e = meta.n_block_rows * max(meta.max_bpr, 1) * _n_tiles(n, bn)
+    return pm.spmm_model_time(n_e, h, w, bn)
+
+
+def _t_xla(meta: ops.SparseMeta, n: int, bn: int) -> float:
+    # gather + einsum + segment_sum: streams every stored element with
+    # blocked (coalesced) access — modeled as CSR traffic at low overhead.
+    h, w = meta.block
+    return pm.csr_spmm_time(meta.nnzb * h * w, n, gather_overhead=2.0)
+
+
+def _t_dense(meta: ops.SparseMeta, n: int, bn: int) -> float:
+    h, w = meta.block
+    return pm.dense_gemm_time(meta.n_block_rows * h, meta.n_block_cols * w, n)
+
+
+register_variant(KernelVariant(
+    name="nnz_stream", backend="pallas", bn_candidates=(128, 256, 512, 1024),
+    model_time=_t_nnz_stream,
+    description="nonzero-block-streamed Pallas kernel (skew-immune)"))
+register_variant(KernelVariant(
+    name="row_loop", backend="row_loop", bn_candidates=(128, 256, 512),
+    model_time=_t_row_loop,
+    supported=lambda meta: meta.max_bpr > 0,
+    description="paper-faithful static 2D schedule (loop to max_bpr)"))
+register_variant(KernelVariant(
+    name="xla", backend="xla", bn_candidates=(512,),
+    model_time=_t_xla,
+    description="pure-jnp gather/segment-sum (shardable oracle path)"))
+register_variant(KernelVariant(
+    name="dense", backend="dense", bn_candidates=(512,),
+    model_time=_t_dense,
+    description="materialized dense GEMM (cuBLAS arm; wins at high density)"))
+
+
+# --------------------------------------------------------------- fingerprint
+def _pow2_bucket(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length() if x > 0 else 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Fingerprint:
+    """Structure stats that determine the best (variant, bn) — the cache
+    key.  Continuous stats are bucketed so near-identical matrices share
+    entries (pad to 10%, skew to 25%, N to the next power of two)."""
+    n_block_rows: int
+    n_block_cols: int
+    block: Tuple[int, int]
+    nnzb: int
+    pad_bucket: int      # padding_ratio in 10% buckets
+    skew_bucket: int     # blocks-per-row cv in 25% buckets
+    n_bucket: int        # next pow2 of N
+
+    def key(self) -> str:
+        h, w = self.block
+        return (f"v1|nbr={self.n_block_rows}|nbc={self.n_block_cols}"
+                f"|b={h}x{w}|nnzb={self.nnzb}|pad={self.pad_bucket}"
+                f"|skew={self.skew_bucket}|n={self.n_bucket}")
+
+
+def _make_fingerprint(nbr: int, nbc: int, block, nnzb: int,
+                      pad_pct: int, cv_pct: int, n: int) -> Fingerprint:
+    """Single bucketing site for both fingerprint paths — the meta-side and
+    BCSR-side keys must agree bit-for-bit or cached picks stop matching."""
+    return Fingerprint(
+        n_block_rows=nbr, n_block_cols=nbc, block=tuple(block), nnzb=nnzb,
+        pad_bucket=pad_pct // 10, skew_bucket=cv_pct // 25,
+        n_bucket=_pow2_bucket(n))
+
+
+def fingerprint(meta: ops.SparseMeta, n: int) -> Fingerprint:
+    """Fingerprint from the static meta ``prepare_sparse`` built."""
+    return _make_fingerprint(meta.n_block_rows, meta.n_block_cols,
+                             meta.block, meta.nnzb,
+                             meta.padding_ratio_pct, meta.bpr_cv_pct, n)
+
+
+def fingerprint_bcsr(a: bcsr_lib.BCSR, n: int) -> Fingerprint:
+    """Fingerprint from a host BCSR — matches ``fingerprint`` of the meta
+    ``prepare_sparse`` would build (same row padding applied first; both
+    sides go through ``BCSR.dispatch_stats`` + ``_make_fingerprint``)."""
+    a_p = a.ensure_nonempty_rows()
+    _, pad_pct, cv_pct = a_p.dispatch_stats()
+    return _make_fingerprint(a_p.n_block_rows, a_p.n_block_cols, a_p.block,
+                             a_p.nnzb, pad_pct, cv_pct, n)
+
+
+# -------------------------------------------------------------------- choice
+@dataclasses.dataclass(frozen=True)
+class KernelChoice:
+    variant: str
+    bn: int
+    source: str = "analytic"    # analytic | measured | default
+    predicted_us: float = 0.0
+
+    @property
+    def backend(self) -> str:
+        return get_variant(self.variant).backend
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "KernelChoice":
+        return KernelChoice(variant=d["variant"], bn=int(d["bn"]),
+                            source=d.get("source", "analytic"),
+                            predicted_us=float(d.get("predicted_us", 0.0)))
+
+
+def default_choice() -> KernelChoice:
+    return KernelChoice(DEFAULT_VARIANT, DEFAULT_BN, source="default")
+
+
+def pick_bn(meta: ops.SparseMeta, n: int,
+            candidates: Iterable[int]) -> int:
+    """Largest candidate whose per-cell working set fits the VMEM budget
+    (wider N-tiles amortize the A-block stream; the budget caps them)."""
+    h, w = meta.block
+    feasible = []
+    for bn in candidates:
+        working = (h * w + w * bn) * 2 + (h * bn) * 4  # bf16 in, f32 acc
+        if working * 2 <= _VMEM_BUDGET:                # double-buffered
+            feasible.append(bn)
+    if not feasible:
+        feasible = [min(candidates)]
+    # no point tiling wider than (padded) N
+    fit_n = [bn for bn in feasible if bn <= max(n, min(feasible))]
+    return max(fit_n or feasible)
+
+
+def analytic_choice(meta: ops.SparseMeta, n: int) -> KernelChoice:
+    """Model-based pick: paper Eq. 1 per variant, minimum predicted time."""
+    best: Optional[Tuple[float, str, int]] = None
+    for v in _REGISTRY.values():
+        if not v.supported(meta):
+            continue
+        bn = pick_bn(meta, n, v.bn_candidates)
+        t = float(v.model_time(meta, n, bn))
+        if best is None or t < best[0]:
+            best = (t, v.name, bn)
+    if best is None:  # every variant gated off — keep the hardcoded default
+        return default_choice()
+    t, name, bn = best
+    return KernelChoice(name, bn, source="analytic", predicted_us=t * 1e6)
+
+
+# ----------------------------------------------------------------- autotuner
+class Autotuner:
+    """Fingerprint -> KernelChoice cache with analytic and measured fills.
+
+    ``cache_path`` (or ``$REPRO_AUTOTUNE_CACHE``) mirrors the table to JSON
+    so benchmark runs warm serving processes; loading tolerates a missing or
+    corrupt file (starts empty), saving is atomic (tmp + rename).
+    """
+
+    def __init__(self, cache_path: Optional[str] = None):
+        self.cache_path = cache_path or os.environ.get(
+            "REPRO_AUTOTUNE_CACHE") or None
+        self._mem: Dict[str, KernelChoice] = {}
+        if self.cache_path:
+            self.load()
+
+    # ------------------------------------------------------------- storage
+    def load(self) -> None:
+        try:
+            with open(self.cache_path) as f:
+                payload = json.load(f)
+            for k, d in payload.get("entries", {}).items():
+                if d.get("variant") in _REGISTRY:
+                    self._mem[k] = KernelChoice.from_dict(d)
+        except (OSError, ValueError, KeyError, AttributeError, TypeError):
+            pass  # absent/corrupt/wrong-shape cache -> start empty
+
+    def save(self) -> None:
+        if not self.cache_path:
+            return
+        payload = {"version": 1,
+                   "entries": {k: c.to_dict() for k, c in self._mem.items()}}
+        tmp = f"{self.cache_path}.tmp.{os.getpid()}"
+        try:
+            os.makedirs(os.path.dirname(os.path.abspath(self.cache_path)),
+                        exist_ok=True)
+            with open(tmp, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.cache_path)
+        except OSError:
+            pass  # read-only FS: in-memory cache still works
+
+    # -------------------------------------------------------------- lookup
+    def get(self, fp: Fingerprint) -> Optional[KernelChoice]:
+        return self._mem.get(fp.key())
+
+    def put(self, fp: Fingerprint, choice: KernelChoice,
+            persist: bool = True) -> None:
+        self._mem[fp.key()] = choice
+        if persist:
+            self.save()
+
+    def __len__(self) -> int:
+        return len(self._mem)
+
+    def pick(self, meta: ops.SparseMeta, n: int) -> KernelChoice:
+        """Cached choice for this structure, analytic on a miss.  Static
+        info only — safe inside jit traces (``backend="auto"`` path)."""
+        fp = fingerprint(meta, n)
+        hit = self.get(fp)
+        if hit is not None:
+            return hit
+        choice = analytic_choice(meta, n)
+        # cache (no disk write: analytic picks are cheap to recompute and
+        # pick() may run inside latency-sensitive first-trace paths)
+        self.put(fp, choice, persist=False)
+        return choice
+
+    # ------------------------------------------------------------- tuning
+    def tune(self, a: bcsr_lib.BCSR, n: int, *, dtype=jnp.float32,
+             interpret: bool = True, variants: Optional[Iterable[str]] = None,
+             warmup: int = 1, iters: int = 3,
+             rng_seed: int = 0) -> Tuple[KernelChoice, Dict[str, float]]:
+        """Timed micro-sweep over registered (variant, bn) candidates.
+
+        Always measures the hardcoded default (nnz_stream, bn=512) so the
+        winner is never slower than it; returns (choice, {candidate: sec}).
+        The winner is cached (and persisted) under the matrix fingerprint.
+        """
+        arrays, meta = ops.prepare_sparse(a, dtype=dtype)
+        fp = fingerprint(meta, n)
+        rng = np.random.default_rng(rng_seed)
+        b = jnp.asarray(rng.standard_normal((meta.shape[1], n)), dtype=dtype)
+
+        names = tuple(variants) if variants else variant_names()
+        cand: Dict[str, Tuple[str, int]] = {}
+        for name in names:
+            v = get_variant(name)
+            if not v.supported(meta):
+                continue
+            bns = {pick_bn(meta, n, v.bn_candidates)}
+            bns.update(bn for bn in v.bn_candidates if bn <= max(n, 128))
+            for bn in sorted(bns):
+                cand[f"{name}/bn{bn}"] = (name, bn)
+        cand.setdefault(f"{DEFAULT_VARIANT}/bn{DEFAULT_BN}",
+                        (DEFAULT_VARIANT, DEFAULT_BN))
+
+        timings: Dict[str, float] = {}
+        for label, (name, bn) in cand.items():
+            backend = get_variant(name).backend
+            fn = jax.jit(lambda bb, _be=backend, _bn=bn: ops.spmm(
+                arrays, meta, bb, backend=_be, bn=_bn, interpret=interpret))
+            try:
+                jax.block_until_ready(fn(b))
+                for _ in range(max(warmup - 1, 0)):
+                    jax.block_until_ready(fn(b))
+                ts = []
+                for _ in range(iters):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(fn(b))
+                    ts.append(time.perf_counter() - t0)
+                timings[label] = float(np.median(ts))
+            except Exception:  # variant not runnable here — skip, don't die
+                continue
+
+        default_label = f"{DEFAULT_VARIANT}/bn{DEFAULT_BN}"
+        if not timings:
+            choice = default_choice()
+        else:
+            best_label = min(timings, key=timings.get)
+            # prefer the default on a tie within noise (2%)
+            if (default_label in timings and
+                    timings[default_label] <= timings[best_label] * 1.02):
+                best_label = default_label
+            name, bn = cand[best_label]
+            choice = KernelChoice(name, bn, source="measured",
+                                  predicted_us=timings[best_label] * 1e6)
+        self.put(fp, choice, persist=True)
+        return choice, timings
+
+
+# ---------------------------------------------------------------- singleton
+_DEFAULT_TUNER: Optional[Autotuner] = None
+
+
+def get_autotuner() -> Autotuner:
+    global _DEFAULT_TUNER
+    if _DEFAULT_TUNER is None:
+        _DEFAULT_TUNER = Autotuner()
+    return _DEFAULT_TUNER
+
+
+def set_autotuner(tuner: Optional[Autotuner]) -> None:
+    """Swap the process-wide tuner (tests; serving with a shared cache)."""
+    global _DEFAULT_TUNER
+    _DEFAULT_TUNER = tuner

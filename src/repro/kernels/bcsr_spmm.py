@@ -28,8 +28,6 @@ documented deviation, see DESIGN.md §8).
 from __future__ import annotations
 
 import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

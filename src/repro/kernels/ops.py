@@ -8,11 +8,19 @@ along as leaves (sharded/replicated like any other param) while the shape
 metadata is static.
 
 Backends:
-  * ``pallas`` — the TPU kernels (``interpret=True`` on CPU).
-  * ``xla``    — pure-jnp reference path (shardable; used by the 512-device
-                 dry-run and as the CI oracle).
-  * ``dense``  — materialize the padded dense matrix and ``jnp.dot`` (the
-                 cuBLAS comparison arm of the paper).
+  * ``pallas``   — the nnz-streamed TPU kernel (``interpret=True`` on CPU).
+                   ``nnz_stream`` is accepted as an alias.
+  * ``row_loop`` — the paper-faithful static-schedule TPU kernel (one grid
+                   cell per block-row x N-tile, masked loop to max_bpr).
+                   Requires ``meta.max_bpr > 0`` (set by ``prepare_sparse``).
+  * ``xla``      — pure-jnp reference path (shardable; used by the
+                   512-device dry-run and as the CI oracle).
+  * ``dense``    — materialize the padded dense matrix and ``jnp.dot`` (the
+                   cuBLAS comparison arm of the paper).
+  * ``auto``     — dispatch through ``repro.kernels.autotune``: the variant
+                   registry picks (backend, bn) from the matrix's stats
+                   fingerprint (cached analytic pick, or a previously
+                   measured micro-sweep result).
 """
 from __future__ import annotations
 
@@ -43,18 +51,33 @@ class SparseArrays(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class SparseMeta:
-    """Static (hashable) metadata of a sparse operand."""
+    """Static (hashable) metadata of a sparse operand.
+
+    The trailing stats fields feed the autotuner's fingerprint (and the
+    ``row_loop`` backend, which needs ``max_bpr`` to size its static
+    schedule).  They default to "unknown" so hand-built metas (e.g. the
+    dry-run's ``sparse_linear_specs``) keep working — the autotuner simply
+    won't propose ``row_loop`` for those.
+    """
     shape: Tuple[int, int]          # logical (M, K)
     block: Tuple[int, int]          # (h, w)
     n_block_rows: int
     n_block_cols: int
     nnzb: int
     nnzb_t: int
+    max_bpr: int = 0                # max blocks per block-row (0 = unknown)
+    padding_ratio_pct: int = 0      # % of stored values that are zeros
+    bpr_cv_pct: int = 0             # blocks-per-row std/mean, in %
+
+
+# accepted aliases -> canonical SpmmConfig.backend strings
+_BACKEND_ALIASES = {"nnz_stream": "pallas"}
+BACKENDS = ("pallas", "row_loop", "xla", "dense")
 
 
 @dataclasses.dataclass(frozen=True)
 class SpmmConfig:
-    backend: str = "pallas"         # pallas | xla | dense
+    backend: str = "pallas"         # pallas | row_loop | xla | dense
     bn: int = 512                   # N-tile width for the Pallas grid
     interpret: bool = False
     out_dtype: Optional[str] = None
@@ -106,14 +129,26 @@ def prepare_sparse(a: bcsr_lib.BCSR, dtype=jnp.bfloat16
         t_row_ids=jnp.asarray(t_row_ids, dtype=jnp.int32),
         t_col_ids=jnp.asarray(t_col_ids, dtype=jnp.int32),
     )
+    max_bpr, pad_pct, cv_pct = a_p.dispatch_stats()
     meta = SparseMeta(shape=a_p.shape, block=a_p.block,
                       n_block_rows=a_p.n_block_rows,
                       n_block_cols=a_p.n_block_cols,
-                      nnzb=a_p.nnzb, nnzb_t=int(t_row_ids.shape[0]))
+                      nnzb=a_p.nnzb, nnzb_t=int(t_row_ids.shape[0]),
+                      max_bpr=max_bpr, padding_ratio_pct=pad_pct,
+                      bpr_cv_pct=cv_pct)
     return arrays, meta
 
 
 # ------------------------------------------------------------ forward pieces
+def _clamp_bn(bn: int, n: int) -> int:
+    """Effective N-tile width: the configured bn, capped at N rounded up to
+    the 128-lane width (a wider tile would only multiply padding).  This is
+    what makes bn a real tuning dimension — the seed code clamped every bn
+    to 128 (``min(cfg.bn, max(128, 1))``), so 256/512/1024 all ran the same
+    grid."""
+    return max(min(bn, -(-n // 128) * 128), 1)
+
+
 def _pad_b(b: jnp.ndarray, w: int, bn: int):
     K, N = b.shape
     k_pad = (-K) % w
@@ -123,17 +158,49 @@ def _pad_b(b: jnp.ndarray, w: int, bn: int):
     return b, N
 
 
+def _row_loop_schedule(row_ids: jnp.ndarray, col_ids: jnp.ndarray,
+                       n_block_rows: int, max_bpr: int):
+    """Traced (jnp) version of ``make_row_loop_schedule``: builds the padded
+    (flat_idx, flat_col, row_len) arrays from the sorted row-major entry
+    list, so the static-schedule kernel is dispatchable straight from
+    ``SparseArrays`` (inside jit, no host BCSR needed).  Padding slots point
+    at entry 0 / column 0, matching the host builder."""
+    nnzb = row_ids.shape[0]
+    ones = jnp.ones((nnzb,), jnp.int32)
+    row_len = jax.ops.segment_sum(ones, row_ids, num_segments=n_block_rows)
+    rowptr = jnp.concatenate([jnp.zeros((1,), row_len.dtype),
+                              jnp.cumsum(row_len)])
+    slot = jnp.arange(nnzb, dtype=jnp.int32) - rowptr[row_ids].astype(jnp.int32)
+    pos = row_ids * max_bpr + slot
+    flat_idx = jnp.zeros((n_block_rows * max_bpr,), jnp.int32
+                         ).at[pos].set(jnp.arange(nnzb, dtype=jnp.int32))
+    flat_col = jnp.zeros((n_block_rows * max_bpr,), jnp.int32
+                         ).at[pos].set(col_ids)
+    return flat_idx, flat_col, row_len.astype(jnp.int32)
+
+
 def _fwd_impl(cfg: SpmmConfig, meta: SparseMeta, arrays: SparseArrays,
               b: jnp.ndarray) -> jnp.ndarray:
     h, w = meta.block
     M, K = meta.shape
     out_dtype = jnp.dtype(cfg.out_dtype) if cfg.out_dtype else b.dtype
-    bn = min(cfg.bn, max(128, 1))
+    bn = _clamp_bn(cfg.bn, b.shape[1])
     b_p, N = _pad_b(b, w, bn)
     bn = min(bn, b_p.shape[1])
     if cfg.backend == "pallas":
         out = pk.bcsr_spmm_nnz_stream(
             arrays.vals, arrays.row_ids, arrays.col_ids, b_p,
+            meta.n_block_rows, bn=bn, out_dtype=out_dtype,
+            interpret=cfg.interpret)
+    elif cfg.backend == "row_loop":
+        if meta.max_bpr <= 0:
+            raise ValueError(
+                "backend='row_loop' needs meta.max_bpr > 0 (metas built by "
+                "prepare_sparse have it; hand-built specs metas do not)")
+        flat_idx, flat_col, row_len = _row_loop_schedule(
+            arrays.row_ids, arrays.col_ids, meta.n_block_rows, meta.max_bpr)
+        out = pk.bcsr_spmm_row_loop(
+            arrays.vals, flat_idx, flat_col, row_len, b_p,
             meta.n_block_rows, bn=bn, out_dtype=out_dtype,
             interpret=cfg.interpret)
     elif cfg.backend == "xla":
@@ -157,10 +224,12 @@ def _dx_impl(cfg: SpmmConfig, meta: SparseMeta, arrays: SparseArrays,
                          dtype=arrays.vals.dtype)
     vals_ext = jnp.concatenate([arrays.vals, sentinel], axis=0)
     t_vals = jnp.transpose(vals_ext[arrays.t_perm], (0, 2, 1))  # [nnzb_t,w,h]
-    bn = min(cfg.bn, max(128, 1))
+    bn = _clamp_bn(cfg.bn, g.shape[1])
     g_p, N = _pad_b(g, h, bn)
     bn = min(bn, g_p.shape[1])
-    if cfg.backend == "pallas":
+    # row_loop is a forward-schedule choice; the backward always streams the
+    # transpose structure (whose row skew differs from A's).
+    if cfg.backend in ("pallas", "row_loop"):
         out = pk.bcsr_spmm_nnz_stream(
             t_vals, arrays.t_row_ids, arrays.t_col_ids, g_p,
             meta.n_block_cols, bn=bn, out_dtype=g.dtype,
@@ -174,13 +243,13 @@ def _dx_impl(cfg: SpmmConfig, meta: SparseMeta, arrays: SparseArrays,
 def _dvals_impl(cfg: SpmmConfig, meta: SparseMeta, arrays: SparseArrays,
                 g: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     h, w = meta.block
-    bn = min(cfg.bn, max(128, 1))
+    bn = _clamp_bn(cfg.bn, max(g.shape[1], b.shape[1]))
     g_p, _ = _pad_b(g, h, bn)
     b_p, _ = _pad_b(b, w, bn)
     n_pad = max(g_p.shape[1], b_p.shape[1])
     g_p = jnp.pad(g_p, ((0, (-g_p.shape[0]) % h), (0, n_pad - g_p.shape[1])))
     b_p = jnp.pad(b_p, ((0, 0), (0, n_pad - b_p.shape[1])))
-    if cfg.backend == "pallas":
+    if cfg.backend in ("pallas", "row_loop"):
         dvals = pk.bcsr_sddmm(g_p, b_p, arrays.row_ids, arrays.col_ids,
                               h, w, bn=min(bn, n_pad),
                               out_dtype=arrays.vals.dtype,
@@ -230,13 +299,43 @@ _spmm.defvjp(_spmm_fwd, _spmm_bwd)
 
 
 # ------------------------------------------------------------------ public API
+def resolve_backend(backend: str, bn: int, meta: SparseMeta,
+                    n: int) -> Tuple[str, int]:
+    """Normalize aliases and resolve ``auto`` through the variant registry.
+
+    ``auto`` needs only static info (meta + N), so this is safe at trace
+    time; a cache miss falls back to the analytic perf-model pick (timed
+    sweeps only happen via explicit ``autotune.Autotuner.tune`` calls).
+    """
+    if backend == "auto":
+        from repro.kernels import autotune  # local import: avoids cycle
+        choice = autotune.get_autotuner().pick(meta, n)
+        backend, bn = choice.backend, choice.bn
+        if backend == "row_loop" and meta.max_bpr <= 0:
+            backend = "pallas"  # stale cached pick for a specs meta
+    backend = _BACKEND_ALIASES.get(backend, backend)
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; want one of "
+                         f"{BACKENDS + ('auto', 'nnz_stream')}")
+    if backend == "row_loop" and meta.max_bpr <= 0:
+        # explicit request we cannot honor — raising beats silently timing
+        # a different kernel than the caller asked for
+        raise ValueError(
+            "backend='row_loop' needs meta.max_bpr > 0 (metas built by "
+            "prepare_sparse have it; hand-built specs metas do not)")
+    return backend, bn
+
+
 def spmm(arrays: SparseArrays, meta: SparseMeta, b: jnp.ndarray,
          *, backend: str = "pallas", bn: int = 512,
          interpret: bool = False, out_dtype=None) -> jnp.ndarray:
     """C = A @ B, differentiable w.r.t. ``arrays.vals`` and ``b``.
 
     A is the BCSR operand from ``prepare_sparse``; B is ``[K, N]`` dense.
+    ``backend="auto"`` dispatches through the ``repro.kernels.autotune``
+    registry using the matrix's stats fingerprint.
     """
+    backend, bn = resolve_backend(backend, bn, meta, int(b.shape[-1]))
     cfg = SpmmConfig(backend=backend, bn=bn, interpret=interpret,
                      out_dtype=str(out_dtype) if out_dtype else None)
     rest = tuple(arrays[1:])

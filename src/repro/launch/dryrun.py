@@ -240,7 +240,6 @@ def main(argv=None):
     else:
         mesh = mesh_lib.make_production_mesh(multi_pod=args.multi_pod)
 
-    cells = []
     archs = list_archs() if (args.all or not args.arch) else [args.arch]
     shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
     records = []

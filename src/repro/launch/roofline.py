@@ -15,9 +15,8 @@ collective bytes are NOT included there, so we parse the optimized HLO text.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional
 
 from repro.core.perf_model import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 

@@ -15,14 +15,14 @@ divide its dimension is dropped (jit in_shardings require divisibility).
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeCell
+from repro.configs.base import ModelConfig
 from repro.launch.mesh import data_axes
 
 

@@ -5,8 +5,7 @@ train/serve loops execute for real; one definition, both uses.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

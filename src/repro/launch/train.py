@@ -13,12 +13,11 @@ Examples:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import logging
 
 import jax
 
-from repro.configs import SHAPES, get_config
+from repro.configs import get_config
 from repro.configs.base import ShapeCell
 from repro.launch import mesh as mesh_lib
 from repro.optim import adamw

@@ -10,15 +10,14 @@ Conventions:
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
 
-from repro.core.sparse_linear import (SparsitySpec, apply_sparse_linear,
+from repro.core.sparse_linear import (apply_sparse_linear,
                                       init_sparse_linear,
                                       sparse_linear_specs)
 from repro.models import unroll as U

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
 
 from repro.launch.constrain import BATCH, MODEL, constrain
-from repro.models.layers import _dense, _init, mlp
+from repro.models.layers import _init, mlp
 
 
 def init_moe(cfg, key, dtype):

@@ -11,8 +11,6 @@ and O(1)-state decode path.  Layout per block:
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -11,12 +11,10 @@ default GSPMD path keeps exact all-reduce.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 
 def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:

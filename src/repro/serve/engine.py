@@ -9,8 +9,7 @@ reset is a masked write).  Sampling: greedy or temperature.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp

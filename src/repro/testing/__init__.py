@@ -1,0 +1,1 @@
+# Test-support helpers (dependency shims for the offline CI container).

@@ -1,0 +1,96 @@
+"""Minimal, deterministic stand-in for the ``hypothesis`` API we use.
+
+The CI container is offline and may lack ``hypothesis``; rather than skip the
+property tests, ``conftest.py`` installs this module under the
+``hypothesis`` / ``hypothesis.strategies`` names when the real package is
+missing.  It implements just the surface the test-suite touches:
+
+  * ``strategies.integers / floats / sampled_from``
+  * ``@settings(max_examples=..., deadline=...)``
+  * ``@given(**kwargs)``
+
+``given`` drives the wrapped test with ``max_examples`` pseudo-random
+examples from a fixed seed, so runs are reproducible (no shrinking, no
+database — this is a deterministic sampler, not a property-testing engine).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Records ``max_examples`` on the (possibly already-``given``-wrapped)
+    test function; order of @settings/@given does not matter."""
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            n = getattr(runner, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            rng = np.random.default_rng(0)
+            for i in range(n):
+                drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:  # surface the failing example
+                    raise AssertionError(
+                        f"falsifying example #{i}: {drawn!r}") from e
+        # hide the drawn parameters from pytest's fixture resolution
+        # (functools.wraps exposes fn's signature via __wrapped__)
+        runner.__signature__ = inspect.Signature()
+        del runner.__wrapped__
+        return runner
+    return deco
+
+
+def install(sys_modules: dict) -> None:
+    """Register this stub as ``hypothesis`` (+ ``.strategies``) in
+    ``sys_modules`` — call only when the real package is unimportable."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "booleans"):
+        setattr(strat, name, globals()[name])
+    mod.strategies = strat
+    mod.__is_repro_stub__ = True
+    sys_modules["hypothesis"] = mod
+    sys_modules["hypothesis.strategies"] = strat

@@ -17,10 +17,9 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time
-from typing import Any, Dict, Iterator, Optional
+from typing import Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import ModelConfig, ShapeCell

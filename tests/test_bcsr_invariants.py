@@ -1,0 +1,86 @@
+"""BCSR invariants the autotuner's fingerprint + dispatch rely on:
+transpose round-trips, row padding preserves the operator, and the two
+``from_csr`` construction paths (scipy fast path / pure-numpy fallback)
+agree exactly."""
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core import bcsr as bcsr_lib
+
+
+def _random_csr(seed, shape, density=0.15):
+    rng = np.random.default_rng(seed)
+    dense = rng.standard_normal(shape).astype(np.float32)
+    dense[rng.random(shape) > density] = 0
+    return sp.csr_matrix(dense), dense
+
+
+# ------------------------------------------------------------------ transpose
+@pytest.mark.parametrize("shape,block", [((96, 64), (16, 16)),
+                                         ((60, 100), (8, 16)),
+                                         ((128, 128), (32, 8))])
+def test_transpose_matches_dense_transpose(shape, block):
+    a = bcsr_lib.random_bcsr(7, shape, block, 0.35, fill_density=0.7)
+    at = a.transpose()
+    np.testing.assert_array_equal(at.to_dense(), a.to_dense().T)
+    assert at.shape == (shape[1], shape[0])
+    assert at.block == (block[1], block[0])
+
+
+def test_transpose_round_trip_identity():
+    a = bcsr_lib.random_bcsr(11, (80, 112), (16, 16), 0.3)
+    att = a.transpose().transpose()
+    np.testing.assert_array_equal(att.to_dense(), a.to_dense())
+    assert att.nnzb == a.nnzb
+    # canonical ordering restored (row-major, rows sorted)
+    assert np.all(np.diff(att.row_ids) >= 0)
+    np.testing.assert_array_equal(att.rowptr, a.rowptr)
+
+
+# ------------------------------------------------------- ensure_nonempty_rows
+def test_ensure_nonempty_rows_preserves_product():
+    # many empty block-rows: tall matrix, low density
+    a = bcsr_lib.random_bcsr(3, (256, 64), (16, 16), 0.08)
+    assert (a.blocks_per_row() == 0).any(), "want empty rows in the fixture"
+    a_p = a.ensure_nonempty_rows()
+    assert np.all(a_p.blocks_per_row() >= 1)
+    b = np.random.default_rng(4).standard_normal((64, 24)).astype(np.float32)
+    np.testing.assert_allclose(a_p.to_dense() @ b, a.to_dense() @ b,
+                               rtol=1e-6, atol=1e-6)
+    # padding adds all-zero blocks only — nnz (true nonzeros) is unchanged
+    assert a_p.nnz == a.nnz
+    assert a_p.nnzb >= a.nnzb
+
+
+def test_ensure_nonempty_rows_idempotent():
+    a = bcsr_lib.random_bcsr(5, (128, 64), (16, 16), 0.1)
+    a_p = a.ensure_nonempty_rows()
+    assert a_p.ensure_nonempty_rows() is a_p
+
+
+# ----------------------------------------------------------- from_csr paths
+@pytest.mark.parametrize("shape,block", [((64, 64), (16, 16)),
+                                         ((100, 72), (8, 16))])
+def test_from_csr_scipy_and_numpy_paths_agree(monkeypatch, shape, block):
+    csr, dense = _random_csr(9, shape)
+    via_scipy = bcsr_lib.from_csr(csr.indptr, csr.indices, csr.data,
+                                  csr.shape, block)
+    monkeypatch.setattr(bcsr_lib, "_sp", None)
+    via_numpy = bcsr_lib.from_csr(csr.indptr, csr.indices, csr.data,
+                                  csr.shape, block)
+    assert via_scipy.nnzb == via_numpy.nnzb
+    np.testing.assert_array_equal(via_scipy.row_ids, via_numpy.row_ids)
+    np.testing.assert_array_equal(via_scipy.col_ids, via_numpy.col_ids)
+    np.testing.assert_array_equal(via_scipy.rowptr, via_numpy.rowptr)
+    np.testing.assert_array_equal(via_scipy.vals, via_numpy.vals)
+    np.testing.assert_array_equal(via_scipy.to_dense(), dense)
+
+
+def test_from_csr_matches_from_dense_blocking():
+    csr, dense = _random_csr(10, (96, 96), density=0.2)
+    a = bcsr_lib.from_csr(csr.indptr, csr.indices, csr.data, csr.shape,
+                          (16, 16))
+    b = bcsr_lib.from_dense(dense, (16, 16))
+    assert a.nnzb == b.nnzb
+    np.testing.assert_array_equal(a.to_dense(), b.to_dense())

@@ -82,8 +82,8 @@ def test_unrolled_forward_matches_scanned(arch):
 # --------------------------------------------------------------- shardings
 def _mesh():
     # AbstractMesh: axis names/sizes without needing >1 real device
-    from jax.sharding import AbstractMesh
-    return AbstractMesh((2, 2), ("data", "model"))
+    # (built via the version-compat helper — signatures differ across JAX)
+    return mesh_lib.make_abstract_mesh((2, 2), ("data", "model"))
 
 
 def test_fit_spec_drops_nondivisible_axes():

@@ -11,7 +11,7 @@ import pytest
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config
 from repro.configs.base import ShapeCell
-from repro.data.pipeline import DataConfig, PrefetchIterator, make_batch
+from repro.data.pipeline import PrefetchIterator, make_batch
 from repro.launch import mesh as mesh_lib
 from repro.models import transformer as T
 from repro.optim import adamw, compress
