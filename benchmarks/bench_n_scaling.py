@@ -14,7 +14,7 @@ import numpy as np
 from benchmarks.common import (emit, modeled_batched_spmv_time,
                                modeled_bcsr_time, modeled_csr_time, timeit)
 from repro.core import bcsr as bcsr_lib
-from repro.core import reorder, topology
+from repro.core import permute, reorder, topology
 from repro.kernels import ref
 
 BLOCK = (16, 16)
@@ -24,8 +24,8 @@ NS = [1, 8, 32, 128, 512, 1000]
 def run():
     rows = []
     csr = topology.suite_matrix("cop20k_A")
-    perm = reorder.jaccard_rows(csr, block_w=BLOCK[1], tau=0.7,
-                                max_candidates=4096)
+    perm = permute.jaccard_rows_fast(csr, block_w=BLOCK[1], tau=0.7,
+                                     max_candidates=4096)
     a = bcsr_lib.from_scipy(reorder.apply_perm(csr, perm),
                             BLOCK).ensure_nonempty_rows()
     rng = np.random.default_rng(0)

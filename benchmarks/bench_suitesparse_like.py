@@ -18,7 +18,7 @@ from benchmarks.common import (effective_gflops, emit,
                                modeled_batched_spmv_time, modeled_bcsr_time,
                                modeled_csr_time, modeled_dense_time, timeit)
 from repro.core import bcsr as bcsr_lib
-from repro.core import reorder, topology
+from repro.core import permute, reorder, topology
 from repro.kernels import ref
 
 BLOCK = (16, 16)
@@ -33,8 +33,8 @@ def run():
         csr = topology.suite_matrix(name)
         m = csr.shape[0]
         nnz = csr.nnz
-        perm = reorder.jaccard_rows(csr, block_w=BLOCK[1], tau=0.7,
-                                    max_candidates=4096)
+        perm = permute.jaccard_rows_fast(csr, block_w=BLOCK[1],
+                                         tau=0.7, max_candidates=4096)
         a = bcsr_lib.from_scipy(reorder.apply_perm(csr, perm),
                                 BLOCK).ensure_nonempty_rows()
         k_pad = a.n_block_cols * BLOCK[1]

@@ -1,8 +1,8 @@
 """Quickstart: the SMaT SpMM library end-to-end.
 
-CSR in -> Jaccard row reorder -> BCSR -> SpMM on the Pallas kernel
-(interpret mode on CPU; the same call targets the TPU MXU), cross-checked
-against dense.
+CSR in -> Jaccard row reorder (transparent: handled inside prepare_sparse)
+-> BCSR -> SpMM on the Pallas kernel (interpret mode on CPU; the same call
+targets the TPU MXU), cross-checked against dense.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,7 +10,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import bcsr as bcsr_lib
-from repro.core import reorder, topology
+from repro.core import topology
 from repro.kernels import ops
 
 # 1. an unstructured sparse matrix in CSR (clustered structure, scattered)
@@ -18,32 +18,38 @@ csr = topology.blocked_random(n=1024, nnz_target=30_000, cluster=32, seed=0)
 print(f"matrix: {csr.shape}, nnz={csr.nnz}, "
       f"sparsity={1 - csr.nnz / (csr.shape[0] * csr.shape[1]):.3%}")
 
-# 2. block-densifying row permutation (the paper's preprocessing)
+# 2. block-densifying row permutation (the paper's preprocessing) — one
+# argument on prepare_sparse.  The permutation is stored as pytree leaves
+# (row_perm / inv_perm) and spmm returns ORIGINAL row order (C = P^T A' B),
+# so nothing downstream has to know about it.  Schemes come from the
+# repro.core.SCHEMES dispatch table: jaccard | rcm | shard_balance |
+# identity.
 block = (16, 16)
-before = bcsr_lib.from_scipy(csr, block)
-perm = reorder.jaccard_rows(csr, block_w=block[1], tau=0.7)
-after = bcsr_lib.from_scipy(reorder.apply_perm(csr, perm), block)
-print(f"BCSR blocks: {before.nnzb} -> {after.nnzb} "
-      f"({before.nnzb / after.nnzb:.2f}x reduction), "
-      f"padding {before.padding_ratio:.1%} -> {after.padding_ratio:.1%}")
+a = bcsr_lib.from_scipy(csr, block)
+arrays, meta = ops.prepare_sparse(a, dtype=jnp.float32, reorder="jaccard")
+arrays_id, meta_id = ops.prepare_sparse(a, dtype=jnp.float32)
+print(f"BCSR blocks: {meta_id.nnzb} -> {meta.nnzb} "
+      f"({meta_id.nnzb / meta.nnzb:.2f}x reduction from reorder="
+      f"{meta.reorder!r})")
 
-# 3. SpMM through the kernel API (custom VJP: also differentiable)
-arrays, meta = ops.prepare_sparse(after.ensure_nonempty_rows(),
-                                  dtype=jnp.float32)
+# 3. SpMM through the kernel API (custom VJP: also differentiable; the VJP
+# carries the permutation through dB and dvals)
 b = jnp.asarray(np.random.default_rng(1).standard_normal(
-    (meta.n_block_cols * block[1], 64)).astype(np.float32))
+    (meta.shape[1], 64)).astype(np.float32))
 y_pallas = ops.spmm(arrays, meta, b, backend="pallas", interpret=True)
-y_dense = ops.spmm(arrays, meta, b, backend="dense")
+y_dense = ops.spmm(arrays_id, meta_id, b, backend="dense")
 err = float(jnp.max(jnp.abs(y_pallas - y_dense)))
-print(f"pallas-vs-dense max err: {err:.2e}")
+print(f"reordered-pallas vs identity-dense max err: {err:.2e}")
 assert err < 1e-3
 
 # 4. autotuned dispatch: the registry picks (variant, bn) from the matrix's
-# structure fingerprint (cached; run Autotuner.tune for a measured sweep)
+# structure fingerprint — which includes the reorder scheme, so the permuted
+# matrix (different bpr skew) never aliases the identity one's cached pick
 from repro.kernels import autotune
+fp = autotune.fingerprint(meta, int(b.shape[1]))
 choice = autotune.get_autotuner().pick(meta, int(b.shape[1]))
-print(f"autotune pick for {autotune.fingerprint(meta, int(b.shape[1])).key()}:"
-      f" {choice.variant}/bn{choice.bn} ({choice.source})")
+print(f"autotune pick for {fp.key()}: "
+      f"{choice.variant}/bn{choice.bn} ({choice.source})")
 y_auto = ops.spmm(arrays, meta, b, backend="auto", interpret=True)
 assert float(jnp.max(jnp.abs(y_auto - y_dense))) < 1e-3
 print("OK")

@@ -4,3 +4,5 @@ from repro.core.sparse_linear import (SparsitySpec, apply_sparse_linear,
                                       init_sparse_linear,
                                       sparse_linear_specs)
 from repro.core import reorder, topology, perf_model
+from repro.core import permute
+from repro.core.permute import SCHEMES, permute_bcsr

@@ -36,6 +36,14 @@ def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
 
 
+def rowptr_from_rows(row_ids: np.ndarray, n_block_rows: int) -> np.ndarray:
+    """CSR-style offsets [n_block_rows + 1] from (sorted) block-row ids —
+    the single rebuild used by every constructor/permuter."""
+    rowptr = np.zeros(n_block_rows + 1, dtype=np.int32)
+    np.add.at(rowptr, np.asarray(row_ids) + 1, 1)
+    return np.cumsum(rowptr).astype(np.int32)
+
+
 @dataclasses.dataclass
 class BCSR:
     """Host-side blocked-CSR matrix (numpy)."""
@@ -125,6 +133,21 @@ class BCSR:
             out[i * h:(i + 1) * h, j * w:(j + 1) * w] = self.vals[s]
         return out[:M, :K]
 
+    def to_scipy(self) -> "_sp.csr_matrix":
+        """Nonzero structure as scipy CSR (host preprocessing: reordering
+        works on element rows).  Stored-but-zero values are dropped — this
+        is the *structure* view, not a value-preserving round-trip for
+        matrices with explicitly stored zeros."""
+        if _sp is None:  # pragma: no cover - scipy present in target env
+            return None
+        h, w = self.block
+        s, i, j = np.nonzero(self.vals)
+        rows = self.row_ids[s].astype(np.int64) * h + i
+        cols = self.col_ids[s].astype(np.int64) * w + j
+        m = _sp.coo_matrix((self.vals[s, i, j], (rows, cols)),
+                           shape=self.shape)
+        return m.tocsr()
+
     def transpose(self) -> "BCSR":
         """Block-structure transpose (used for dX = A^T @ dY in the VJP)."""
         order = np.lexsort((self.row_ids, self.col_ids))  # sort by (col, row)
@@ -133,19 +156,25 @@ class BCSR:
         t_rows = self.col_ids[order].astype(np.int32)
         t_cols = self.row_ids[order].astype(np.int32)
         n_brows_t = self.n_block_cols
-        rowptr = np.zeros(n_brows_t + 1, dtype=np.int32)
-        np.add.at(rowptr, t_rows + 1, 1)
-        rowptr = np.cumsum(rowptr).astype(np.int32)
+        rowptr = rowptr_from_rows(t_rows, n_brows_t)
         return BCSR(t_vals, t_cols, t_rows, rowptr,
                     (self.shape[1], self.shape[0]),
                     (self.block[1], self.block[0]))
 
-    def ensure_nonempty_rows(self) -> "BCSR":
+    def ensure_nonempty_rows(self, return_mask: bool = False):
         """Pad so every block-row holds >= 1 block (required by the
-        nnz-streamed kernel so each output tile is visited/zeroed)."""
+        nnz-streamed kernel so each output tile is visited/zeroed).
+
+        With ``return_mask=True`` returns ``(padded, real_mask)`` where
+        ``real_mask[s]`` is False exactly for the entries this call
+        appended.  The padding is tagged BEFORE the lexsort, so genuinely
+        zero original blocks (e.g. ``random_bcsr(fill_density<1)``) stay
+        marked real — their gradients must not be masked."""
         bpr = self.blocks_per_row()
         empty = np.flatnonzero(bpr == 0)
         if empty.size == 0:
+            if return_mask:
+                return self, np.ones(self.nnzb, dtype=bool)
             return self
         h, w = self.block
         pad_vals = np.zeros((empty.size, h, w), dtype=self.vals.dtype)
@@ -153,13 +182,18 @@ class BCSR:
         col_ids = np.concatenate([self.col_ids,
                                   np.zeros(empty.size, np.int32)])
         row_ids = np.concatenate([self.row_ids, empty.astype(np.int32)])
+        real = np.concatenate([np.ones(self.nnzb, dtype=bool),
+                               np.zeros(empty.size, dtype=bool)])
         order = np.lexsort((col_ids, row_ids))
         vals, col_ids, row_ids = vals[order], col_ids[order], row_ids[order]
-        rowptr = np.zeros(self.n_block_rows + 1, dtype=np.int32)
-        np.add.at(rowptr, row_ids + 1, 1)
-        rowptr = np.cumsum(rowptr).astype(np.int32)
-        return BCSR(vals, col_ids.astype(np.int32), row_ids.astype(np.int32),
-                    rowptr, self.shape, self.block)
+        real = real[order]
+        rowptr = rowptr_from_rows(row_ids, self.n_block_rows)
+        padded = BCSR(vals, col_ids.astype(np.int32),
+                      row_ids.astype(np.int32), rowptr, self.shape,
+                      self.block)
+        if return_mask:
+            return padded, real
+        return padded
 
     def astype(self, dtype) -> "BCSR":
         return dataclasses.replace(self, vals=self.vals.astype(dtype))
@@ -181,9 +215,7 @@ def from_dense(a: np.ndarray, block: Tuple[int, int]) -> BCSR:
     mask = np.abs(blocks).sum(axis=(2, 3)) != 0  # [nbr, nbc]
     row_ids, col_ids = np.nonzero(mask)
     vals = np.ascontiguousarray(blocks[row_ids, col_ids])
-    rowptr = np.zeros(nbr + 1, dtype=np.int32)
-    np.add.at(rowptr, row_ids + 1, 1)
-    rowptr = np.cumsum(rowptr).astype(np.int32)
+    rowptr = rowptr_from_rows(row_ids, nbr)
     return BCSR(vals, col_ids.astype(np.int32), row_ids.astype(np.int32),
                 rowptr, (M, K), (h, w))
 
@@ -207,7 +239,9 @@ def from_csr(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
         uniq, inv = np.unique(bid, return_inverse=True)
         nnzb = uniq.size
         vals = np.zeros((nnzb, h, w), dtype=data.dtype)
-        vals[inv, coo.row % h, coo.col % w] = coo.data
+        # accumulate — duplicate COO coordinates must sum like
+        # scipy's sum_duplicates, not keep-last
+        np.add.at(vals, (inv, coo.row % h, coo.col % w), coo.data)
         row_ids = (uniq // nbc).astype(np.int32)
         col_ids = (uniq % nbc).astype(np.int32)
     else:  # pragma: no cover - scipy present in target env
@@ -218,12 +252,10 @@ def from_csr(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
         uniq, inv = np.unique(bid, return_inverse=True)
         nnzb = uniq.size
         vals = np.zeros((nnzb, h, w), dtype=data.dtype)
-        vals[inv, rows % h, indices % w] = data
+        np.add.at(vals, (inv, rows % h, indices % w), data)
         row_ids = (uniq // nbc).astype(np.int32)
         col_ids = (uniq % nbc).astype(np.int32)
-    rowptr = np.zeros(nbr + 1, dtype=np.int32)
-    np.add.at(rowptr, row_ids + 1, 1)
-    rowptr = np.cumsum(rowptr).astype(np.int32)
+    rowptr = rowptr_from_rows(row_ids, nbr)
     return BCSR(vals, col_ids, row_ids, rowptr, shape, block)
 
 
@@ -261,9 +293,7 @@ def random_bcsr_exact(key: int, shape: Tuple[int, int],
     row_ids = pairs[:, 0].astype(np.int32)
     col_ids = pairs[:, 1].astype(np.int32)
     vals = (rng.standard_normal((nnzb, h, w)) / math.sqrt(w)).astype(dtype)
-    rowptr = np.zeros(nbr + 1, dtype=np.int32)
-    np.add.at(rowptr, row_ids + 1, 1)
-    rowptr = np.cumsum(rowptr).astype(np.int32)
+    rowptr = rowptr_from_rows(row_ids, nbr)
     return BCSR(vals, col_ids, row_ids, rowptr, shape, block)
 
 
@@ -283,8 +313,6 @@ def random_bcsr(key: int, shape: Tuple[int, int], block: Tuple[int, int],
     if fill_density < 1.0:
         keep = rng.random((nnzb, h, w)) < fill_density
         vals = np.where(keep, vals, 0).astype(dtype)
-    rowptr = np.zeros(nbr + 1, dtype=np.int32)
-    np.add.at(rowptr, row_ids.astype(np.int32) + 1, 1)
-    rowptr = np.cumsum(rowptr).astype(np.int32)
+    rowptr = rowptr_from_rows(row_ids, nbr)
     return BCSR(vals, col_ids.astype(np.int32), row_ids.astype(np.int32),
                 rowptr, shape, block)

@@ -17,6 +17,11 @@ We implement:
 
 All routines operate host-side on scipy CSR and return permutation arrays;
 they run once at preprocessing time, exactly as in the paper.
+
+NOTE: the implementations here are the O(n^2) pure-Python *references*.
+The production pipeline (``ops.prepare_sparse(reorder=...)``) dispatches
+through ``core.permute.SCHEMES``, whose ``jaccard`` entry is the vectorized
+packed-bitmask clustering; ``reorder()`` below uses the same table.
 """
 from __future__ import annotations
 
@@ -101,15 +106,18 @@ def jaccard_rows_cols(csr: sp.csr_matrix, block: Tuple[int, int] = (128, 128),
 
 # --------------------------------------------------------------------- others
 def rcm(csr: sp.csr_matrix) -> np.ndarray:
-    """Reverse Cuthill-McKee bandwidth-minimizing permutation [29]."""
+    """Reverse Cuthill-McKee bandwidth-minimizing permutation [29].
+
+    scipy's RCM needs a square adjacency; rectangular matrices use the
+    row-connectivity graph A A^T (rows adjacent when they share a column)."""
     n, m = csr.shape
     if n == m:
         sym = csr + csr.T
-        return np.asarray(
-            sp.csgraph.reverse_cuthill_mckee(sym.tocsr(), symmetric_mode=True),
-            dtype=np.int64)
-    return np.asarray(sp.csgraph.reverse_cuthill_mckee(csr),
-                      dtype=np.int64)
+    else:
+        sym = csr @ csr.T
+    return np.asarray(
+        sp.csgraph.reverse_cuthill_mckee(sym.tocsr(), symmetric_mode=True),
+        dtype=np.int64)
 
 
 def identity(csr: sp.csr_matrix) -> np.ndarray:
@@ -140,23 +148,18 @@ def shard_balance(row_ids: np.ndarray, rowptr: np.ndarray,
 
 
 # ------------------------------------------------------------------ dispatcher
-SCHEMES = {
-    "jaccard": jaccard_rows,
-    "rcm": rcm,
-    "identity": identity,
-}
-
-
 def reorder(csr: sp.csr_matrix, scheme: str = "jaccard",
-            block_w: int = 128, tau: float = 0.7) -> np.ndarray:
-    if scheme == "jaccard":
-        return jaccard_rows(csr, block_w=block_w, tau=tau)
-    if scheme == "rcm":
-        return rcm(csr)
-    if scheme == "identity":
-        return identity(csr)
-    raise ValueError(f"unknown reorder scheme {scheme!r}; "
-                     f"options: {sorted(SCHEMES)}")
+            block_w: int = 128, tau: float = 0.7, **opts) -> np.ndarray:
+    """Dispatch through the single ``SCHEMES`` table (defined in
+    ``core.permute``, which maps ``jaccard`` to the vectorized bitmask
+    clustering).  Extra ``opts`` (``max_candidates``, ``n_shards``) pass
+    straight to the scheme."""
+    from repro.core import permute  # local: permute imports this module
+    if scheme not in permute.SCHEMES:
+        raise ValueError(f"unknown reorder scheme {scheme!r}; "
+                         f"options: {sorted(permute.SCHEMES)}")
+    return permute.SCHEMES[scheme](csr, block=(block_w, block_w), tau=tau,
+                                   **opts)
 
 
 def apply_perm(csr: sp.csr_matrix, row_perm: Optional[np.ndarray] = None,
@@ -167,3 +170,14 @@ def apply_perm(csr: sp.csr_matrix, row_perm: Optional[np.ndarray] = None,
     if col_perm is not None:
         out = out[:, col_perm]
     return out.tocsr()
+
+
+# The single dispatch table lives in ``core.permute`` (it maps ``jaccard``
+# to the vectorized implementation and registers ``jaccard_rows_cols`` /
+# ``shard_balance``); ``reorder.SCHEMES`` resolves to it lazily (PEP 562)
+# because ``permute`` imports the reference routines defined above.
+def __getattr__(name):
+    if name == "SCHEMES":
+        from repro.core.permute import SCHEMES
+        return SCHEMES
+    raise AttributeError(name)

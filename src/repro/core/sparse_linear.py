@@ -34,6 +34,14 @@ class SparsitySpec:
     tune_n`` — set it to the expected activation token count (batch x seq
     of a training/serving step) so the warmed cache bucket is the one
     apply-time lookups actually hit.
+
+    ``reorder`` applies a block-row permutation to the weight at init
+    (``core.permute.SCHEMES``: jaccard | rcm | shard_balance | identity).
+    Block-row granularity keeps nnzb static, so scan-stacked layers keep
+    sharing leaf shapes; ``ops.spmm`` un-permutes outputs, so the layer's
+    math is unchanged.  ``shard_balance`` balances per-shard nonzero-block
+    loads over ``reorder_shards`` shards (0 = derive from the runtime
+    device count via ``launch.sharding.spmm_shard_count``).
     """
     density: float = 0.1            # fraction of nonzero blocks
     block: Tuple[int, int] = (128, 128)
@@ -41,6 +49,8 @@ class SparsitySpec:
     bn: int = 512
     interpret: bool = False
     tune_n: int = 0                 # measured sweep at init for this N
+    reorder: str = "identity"       # weight row-permutation scheme
+    reorder_shards: int = 0         # shard_balance bins (0 = auto)
 
 
 def _nnzb_for(spec: SparsitySpec, out_dim: int, in_dim: int) -> int:
@@ -54,18 +64,32 @@ def _nnzb_for(spec: SparsitySpec, out_dim: int, in_dim: int) -> int:
     return nnzb
 
 
+def _reorder_shards(spec: SparsitySpec) -> int:
+    if spec.reorder_shards:
+        return spec.reorder_shards
+    from repro.launch.sharding import spmm_shard_count  # local: layering
+    return spmm_shard_count()
+
+
 def init_sparse_linear(key: int, in_dim: int, out_dim: int,
                        spec: SparsitySpec, dtype=jnp.bfloat16):
     """Returns (params, meta): params is a pytree of device arrays (vals is
-    the trainable leaf; index arrays ride along), meta is static."""
+    the trainable leaf; index arrays — including the ``reorder`` row
+    permutation — ride along), meta is static."""
     a = bcsr_lib.random_bcsr_exact(
         key, (out_dim, in_dim), spec.block, _nnzb_for(spec, out_dim, in_dim),
         dtype=np.float32)
-    arrays, meta = ops.prepare_sparse(a, dtype=dtype)
+    n_shards = _reorder_shards(spec)
+    # block_row granularity: the permutation relabels whole block-rows, so
+    # nnzb (and every leaf shape) matches sparse_linear_specs exactly
+    arrays, meta = ops.prepare_sparse(
+        a, dtype=dtype, reorder=spec.reorder,
+        reorder_granularity="block_row", n_shards=n_shards)
     if spec.backend == "auto" and spec.tune_n > 0:
         from repro.kernels import autotune
-        autotune.get_autotuner().tune(a, spec.tune_n,
-                                      interpret=spec.interpret)
+        autotune.get_autotuner().tune(
+            a, spec.tune_n, interpret=spec.interpret, reorder=spec.reorder,
+            reorder_granularity="block_row", n_shards=n_shards)
     params = {
         "vals": arrays.vals,
         "row_ids": arrays.row_ids,
@@ -74,6 +98,8 @@ def init_sparse_linear(key: int, in_dim: int, out_dim: int,
         "t_perm": arrays.t_perm,
         "t_row_ids": arrays.t_row_ids,
         "t_col_ids": arrays.t_col_ids,
+        "row_perm": arrays.row_perm,
+        "inv_perm": arrays.inv_perm,
     }
     return params, meta
 
@@ -93,10 +119,12 @@ def sparse_linear_specs(in_dim: int, out_dim: int, spec: SparsitySpec,
         "t_perm": sds((nnzb,), jnp.int32),
         "t_row_ids": sds((nnzb,), jnp.int32),
         "t_col_ids": sds((nnzb,), jnp.int32),
+        "row_perm": sds((out_dim,), jnp.int32),
+        "inv_perm": sds((out_dim,), jnp.int32),
     }
     meta = ops.SparseMeta(shape=(out_dim, in_dim), block=spec.block,
                           n_block_rows=nbr, n_block_cols=nbc,
-                          nnzb=nnzb, nnzb_t=nnzb)
+                          nnzb=nnzb, nnzb_t=nnzb, reorder=spec.reorder)
     return params, meta
 
 
@@ -113,7 +141,8 @@ def apply_sparse_linear(params: dict, meta: ops.SparseMeta, x: jnp.ndarray,
         vals=params["vals"], row_ids=params["row_ids"],
         col_ids=params["col_ids"], real_mask=params["real_mask"],
         t_perm=params["t_perm"], t_row_ids=params["t_row_ids"],
-        t_col_ids=params["t_col_ids"])
+        t_col_ids=params["t_col_ids"],
+        row_perm=params.get("row_perm"), inv_perm=params.get("inv_perm"))
     lead = x.shape[:-1]
     in_dim = x.shape[-1]
     xt = x.reshape(-1, in_dim).T                     # [K, T]

@@ -143,7 +143,10 @@ def _pow2_bucket(x: int) -> int:
 class Fingerprint:
     """Structure stats that determine the best (variant, bn) — the cache
     key.  Continuous stats are bucketed so near-identical matrices share
-    entries (pad to 10%, skew to 25%, N to the next power of two)."""
+    entries (pad to 10%, skew to 25%, N to the next power of two).
+    ``reorder`` is part of the key: a permuted matrix has a different
+    blocks-per-row skew than its un-permuted twin, so cached picks must
+    not alias across reorder schemes."""
     n_block_rows: int
     n_block_cols: int
     block: Tuple[int, int]
@@ -151,39 +154,47 @@ class Fingerprint:
     pad_bucket: int      # padding_ratio in 10% buckets
     skew_bucket: int     # blocks-per-row cv in 25% buckets
     n_bucket: int        # next pow2 of N
+    reorder: str = "identity"
 
     def key(self) -> str:
         h, w = self.block
-        return (f"v1|nbr={self.n_block_rows}|nbc={self.n_block_cols}"
+        return (f"v2|nbr={self.n_block_rows}|nbc={self.n_block_cols}"
                 f"|b={h}x{w}|nnzb={self.nnzb}|pad={self.pad_bucket}"
-                f"|skew={self.skew_bucket}|n={self.n_bucket}")
+                f"|skew={self.skew_bucket}|n={self.n_bucket}"
+                f"|ro={self.reorder}")
 
 
 def _make_fingerprint(nbr: int, nbc: int, block, nnzb: int,
-                      pad_pct: int, cv_pct: int, n: int) -> Fingerprint:
+                      pad_pct: int, cv_pct: int, n: int,
+                      reorder: str = "identity") -> Fingerprint:
     """Single bucketing site for both fingerprint paths — the meta-side and
     BCSR-side keys must agree bit-for-bit or cached picks stop matching."""
     return Fingerprint(
         n_block_rows=nbr, n_block_cols=nbc, block=tuple(block), nnzb=nnzb,
         pad_bucket=pad_pct // 10, skew_bucket=cv_pct // 25,
-        n_bucket=_pow2_bucket(n))
+        n_bucket=_pow2_bucket(n), reorder=reorder)
 
 
 def fingerprint(meta: ops.SparseMeta, n: int) -> Fingerprint:
     """Fingerprint from the static meta ``prepare_sparse`` built."""
     return _make_fingerprint(meta.n_block_rows, meta.n_block_cols,
                              meta.block, meta.nnzb,
-                             meta.padding_ratio_pct, meta.bpr_cv_pct, n)
+                             meta.padding_ratio_pct, meta.bpr_cv_pct, n,
+                             reorder=meta.reorder)
 
 
-def fingerprint_bcsr(a: bcsr_lib.BCSR, n: int) -> Fingerprint:
+def fingerprint_bcsr(a: bcsr_lib.BCSR, n: int,
+                     reorder: str = "identity") -> Fingerprint:
     """Fingerprint from a host BCSR — matches ``fingerprint`` of the meta
     ``prepare_sparse`` would build (same row padding applied first; both
-    sides go through ``BCSR.dispatch_stats`` + ``_make_fingerprint``)."""
+    sides go through ``BCSR.dispatch_stats`` + ``_make_fingerprint``).
+    ``reorder`` names the scheme that PRODUCED this matrix's structure —
+    pass the same value given to ``prepare_sparse``; the matrix itself is
+    not re-permuted here."""
     a_p = a.ensure_nonempty_rows()
     _, pad_pct, cv_pct = a_p.dispatch_stats()
     return _make_fingerprint(a_p.n_block_rows, a_p.n_block_cols, a_p.block,
-                             a_p.nnzb, pad_pct, cv_pct, n)
+                             a_p.nnzb, pad_pct, cv_pct, n, reorder=reorder)
 
 
 # -------------------------------------------------------------------- choice
@@ -316,15 +327,22 @@ class Autotuner:
     # ------------------------------------------------------------- tuning
     def tune(self, a: bcsr_lib.BCSR, n: int, *, dtype=jnp.float32,
              interpret: bool = True, variants: Optional[Iterable[str]] = None,
-             warmup: int = 1, iters: int = 3,
-             rng_seed: int = 0) -> Tuple[KernelChoice, Dict[str, float]]:
+             warmup: int = 1, iters: int = 3, rng_seed: int = 0,
+             reorder: str = "identity",
+             reorder_granularity: str = "element",
+             n_shards: int = 8) -> Tuple[KernelChoice, Dict[str, float]]:
         """Timed micro-sweep over registered (variant, bn) candidates.
 
         Always measures the hardcoded default (nnz_stream, bn=512) so the
         winner is never slower than it; returns (choice, {candidate: sec}).
         The winner is cached (and persisted) under the matrix fingerprint.
+        ``reorder`` mirrors the ``prepare_sparse`` arguments so the sweep
+        measures (and the fingerprint matches) the permuted structure the
+        apply path will actually dispatch on.
         """
-        arrays, meta = ops.prepare_sparse(a, dtype=dtype)
+        arrays, meta = ops.prepare_sparse(
+            a, dtype=dtype, reorder=reorder,
+            reorder_granularity=reorder_granularity, n_shards=n_shards)
         fp = fingerprint(meta, n)
         rng = np.random.default_rng(rng_seed)
         b = jnp.asarray(rng.standard_normal((meta.shape[1], n)), dtype=dtype)

@@ -39,7 +39,13 @@ from repro.kernels import ref
 
 # ---------------------------------------------------------------------- types
 class SparseArrays(NamedTuple):
-    """Device arrays of a BCSR operand (pytree leaves)."""
+    """Device arrays of a BCSR operand (pytree leaves).
+
+    ``row_perm`` / ``inv_perm`` carry the block-densifying row permutation
+    (paper IV-C) applied by ``prepare_sparse(reorder=...)``: the stored
+    blocks are those of A' = P A, and ``spmm`` returns C = P^T (A' B) so
+    callers always see ORIGINAL row order.  They default to None for
+    hand-built operands (identity semantics)."""
     vals: jnp.ndarray        # [nnzb, h, w] — the only trainable leaf
     row_ids: jnp.ndarray     # [nnzb] int32, sorted row-major
     col_ids: jnp.ndarray     # [nnzb] int32
@@ -47,6 +53,8 @@ class SparseArrays(NamedTuple):
     t_perm: jnp.ndarray      # [nnzb_t] int32 into vals (nnzb == sentinel zero)
     t_row_ids: jnp.ndarray   # [nnzb_t] int32 (block-rows of A^T)
     t_col_ids: jnp.ndarray   # [nnzb_t] int32
+    row_perm: Optional[jnp.ndarray] = None   # [M] int32: A'[i] = A[row_perm[i]]
+    inv_perm: Optional[jnp.ndarray] = None   # [M] int32: argsort(row_perm)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +76,9 @@ class SparseMeta:
     max_bpr: int = 0                # max blocks per block-row (0 = unknown)
     padding_ratio_pct: int = 0      # % of stored values that are zeros
     bpr_cv_pct: int = 0             # blocks-per-row std/mean, in %
+    reorder: str = "identity"       # row-permutation scheme baked into vals
+                                    # (autotune fingerprints on it: permuted
+                                    # matrices have different bpr skew)
 
 
 # accepted aliases -> canonical SpmmConfig.backend strings
@@ -84,21 +95,33 @@ class SpmmConfig:
 
 
 # ------------------------------------------------------------------- prepare
-def prepare_sparse(a: bcsr_lib.BCSR, dtype=jnp.bfloat16
+def prepare_sparse(a: bcsr_lib.BCSR, dtype=jnp.bfloat16, *,
+                   reorder: str = "identity",
+                   reorder_granularity: str = "element",
+                   tau: float = 0.7, max_candidates: Optional[int] = None,
+                   n_shards: int = 8
                    ) -> Tuple[SparseArrays, SparseMeta]:
-    """Host BCSR -> kernel-ready device arrays + static meta."""
-    nnzb_real = a.nnzb
-    a_p = a.ensure_nonempty_rows()
-    real_mask = np.zeros(a_p.nnzb, dtype=bool)
-    # padding entries are the all-zero blocks appended by ensure_nonempty_rows;
-    # identify originals by matching (row, col, nonzero) — padding is zero.
-    nz = np.abs(a_p.vals).sum(axis=(1, 2)) != 0
-    real_mask[nz] = True
-    # keep genuinely-zero original blocks trainable too (rare, from from_dense
-    # they don't exist; from random_bcsr fill they do): mark first nnzb_real
-    # sorted entries — conservative: everything not introduced by padding.
-    if a_p.nnzb == nnzb_real:
-        real_mask[:] = True
+    """Host BCSR -> kernel-ready device arrays + static meta.
+
+    ``reorder`` applies a block-densifying row permutation first (any
+    scheme in ``core.permute.SCHEMES`` that yields a pure row permutation:
+    ``jaccard`` | ``rcm`` | ``shard_balance`` | ``identity``).  The
+    permutation is transparent downstream: ``spmm`` un-permutes its output
+    (C = P^T (A' B)) and the custom VJP carries P through dB and dvals, so
+    results match ``reorder="identity"`` while the kernel streams the
+    denser A'.  ``reorder_granularity="element"`` (default) re-blocks the
+    permuted NONZERO structure — explicitly-stored zero blocks do not
+    survive it; ``"block_row"`` permutes whole block-rows instead (nnzb
+    and all stored entries preserved — the model-weight path, where
+    stacked leaf shapes must be static and zero blocks stay trainable)."""
+    from repro.core import permute as permute_lib  # local: import cycle
+    a, row_perm_np = permute_lib.permute_bcsr(
+        a, reorder, tau=tau, max_candidates=max_candidates,
+        n_shards=n_shards, granularity=reorder_granularity)
+    # padding entries are tagged explicitly by ensure_nonempty_rows (before
+    # its lexsort), so genuinely-zero original blocks — e.g. from
+    # random_bcsr(fill_density<1) — keep real_mask=True and stay trainable.
+    a_p, real_mask = a.ensure_nonempty_rows(return_mask=True)
 
     # ---- transpose structure (entries of A^T in row-major order of A^T) ----
     order = np.lexsort((a_p.row_ids, a_p.col_ids))
@@ -120,6 +143,7 @@ def prepare_sparse(a: bcsr_lib.BCSR, dtype=jnp.bfloat16
         t_perm, t_row_ids, t_col_ids = (t_perm[order_t], t_row_ids[order_t],
                                         t_col_ids[order_t])
 
+    inv_perm_np = permute_lib.invert_perm(row_perm_np)
     arrays = SparseArrays(
         vals=jnp.asarray(a_p.vals, dtype=dtype),
         row_ids=jnp.asarray(a_p.row_ids, dtype=jnp.int32),
@@ -128,6 +152,8 @@ def prepare_sparse(a: bcsr_lib.BCSR, dtype=jnp.bfloat16
         t_perm=jnp.asarray(t_perm, dtype=jnp.int32),
         t_row_ids=jnp.asarray(t_row_ids, dtype=jnp.int32),
         t_col_ids=jnp.asarray(t_col_ids, dtype=jnp.int32),
+        row_perm=jnp.asarray(row_perm_np, dtype=jnp.int32),
+        inv_perm=jnp.asarray(inv_perm_np, dtype=jnp.int32),
     )
     max_bpr, pad_pct, cv_pct = a_p.dispatch_stats()
     meta = SparseMeta(shape=a_p.shape, block=a_p.block,
@@ -135,7 +161,7 @@ def prepare_sparse(a: bcsr_lib.BCSR, dtype=jnp.bfloat16
                       n_block_cols=a_p.n_block_cols,
                       nnzb=a_p.nnzb, nnzb_t=int(t_row_ids.shape[0]),
                       max_bpr=max_bpr, padding_ratio_pct=pad_pct,
-                      bpr_cv_pct=cv_pct)
+                      bpr_cv_pct=cv_pct, reorder=reorder)
     return arrays, meta
 
 
@@ -212,7 +238,12 @@ def _fwd_impl(cfg: SpmmConfig, meta: SparseMeta, arrays: SparseArrays,
                                  out_dtype=out_dtype)
     else:
         raise ValueError(f"unknown backend {cfg.backend!r}")
-    return out[:M, :N]
+    out = out[:M, :N]
+    if meta.reorder != "identity" and arrays.inv_perm is not None:
+        # kernel computed C' = A' B in permuted row order; hand back
+        # C = P^T C' so the permutation never leaks to callers
+        out = jnp.take(out, arrays.inv_perm, axis=0)
+    return out
 
 
 def _dx_impl(cfg: SpmmConfig, meta: SparseMeta, arrays: SparseArrays,
@@ -288,6 +319,11 @@ def _spmm_bwd(cfg, meta, res, g):
     vals, b, rest = res
     arrays = SparseArrays(vals, *rest)
     g2 = g.astype(b.dtype)
+    if meta.reorder != "identity" and arrays.row_perm is not None:
+        # cotangent arrives in ORIGINAL row order; the stored structure is
+        # A' = P A, so both dB = A'^T (P dC) and the SDDMM for dvals need
+        # the permuted cotangent g' = P g
+        g2 = jnp.take(g2, arrays.row_perm, axis=0)
     db = _dx_impl(cfg, meta, arrays, g2)[: b.shape[0], : b.shape[1]]
     dvals = _dvals_impl(cfg, meta, arrays, g2, b)
     zeros_rest = jax.tree.map(

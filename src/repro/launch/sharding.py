@@ -60,6 +60,9 @@ _PARAM_RULES = {
     "vals": P(None, None, None),
     "row_ids": P(None), "col_ids": P(None), "real_mask": P(None),
     "t_perm": P(None), "t_row_ids": P(None), "t_col_ids": P(None),
+    # reorder permutation leaves (core.permute): replicated like the other
+    # index arrays — every chip un-permutes its own token panel's output
+    "row_perm": P(None), "inv_perm": P(None),
 }
 
 _MOE_EXPERT_LEAVES = {"w_gate", "w_up", "w_down"}  # [E, D, F] under "moe"
@@ -126,6 +129,19 @@ def _rule_for(path, leaf) -> P:
 def _batch_axes(mesh):
     da = data_axes(mesh)
     return da if len(da) > 1 else (da[0] if da else None)
+
+
+def spmm_shard_count(mesh=None) -> int:
+    """Number of shards a sparse layer's work is split across — the bin
+    count ``SparsitySpec(reorder="shard_balance")`` balances nonzero-block
+    loads over (``core.permute.shard_balance_rows``).  BCSR weights are
+    replicated under the rules above while the token panel is sharded over
+    ALL mesh axes (see ``apply_sparse_linear``), so the balance target is
+    the full mesh size; with no mesh yet (init before launch) it falls
+    back to the process's device count."""
+    if mesh is None:
+        return max(jax.device_count(), 1)
+    return max(int(np.prod([mesh.shape[a] for a in mesh.axis_names])), 1)
 
 
 def _strip_data_axes(spec: P) -> P:

@@ -319,7 +319,11 @@ def init_mlp(cfg, key, dtype, d_ff=None, seed_hint: int = 0):
     if cfg.ffn_sparsity is not None:
         # sparse patterns are STRUCTURAL (host-side numpy): seeded by a
         # python int per layer, not the traced jax key — this keeps
-        # init_params eval_shape-able for the dry-run
+        # init_params eval_shape-able for the dry-run.  The spec's
+        # ``reorder`` scheme is applied here too (block-row granularity,
+        # so every layer keeps the same nnzb and the stack still scans);
+        # apply_sparse_linear sees it via the row_perm/inv_perm leaves and
+        # the spec-derived meta, and un-permutes outputs transparently.
         seed = 7919 * (seed_hint + 1)
         gate, _ = init_sparse_linear(seed, d, f, cfg.ffn_sparsity, dtype)
         up, _ = init_sparse_linear(seed + 1, d, f, cfg.ffn_sparsity, dtype)

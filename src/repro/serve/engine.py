@@ -18,6 +18,36 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
 
+# decode-cache batch-axis position by leaf name (same layout conventions as
+# launch.sharding.cache_shardings):
+#   attn k/v [..., B, S, KV, dh]; mla ckv/krope [..., B, S, r];
+#   ssd conv [..., B, cw-1, d] / state [..., B, H, P, N]
+_CACHE_BATCH_AXIS = {"k": -4, "v": -4, "ckv": -3, "krope": -3,
+                     "conv": -3, "state": -4}
+
+
+def _merge_cache(old, new, slot_mask):
+    """Keep ``new`` cache entries only for slots in ``slot_mask`` [B] bool.
+
+    A batched ``decode_step`` writes KV at the step's ``pos`` for EVERY
+    batch row — including pad tokens of slots that are mid-sequence at a
+    different position.  Without this merge, each per-group decode in
+    ``ServeEngine.step`` (and each prompt token in ``_admit``) overwrites
+    the other slots' already-written cache entries with pad-token KV."""
+    def merge(path, o, n):
+        name = getattr(path[-1], "key", getattr(path[-1], "name", None))
+        ax = _CACHE_BATCH_AXIS.get(name)
+        if ax is None:
+            # fail loudly: an unmerged leaf would silently reintroduce the
+            # cross-slot corruption for whatever layer type added it
+            raise KeyError(
+                f"unknown decode-cache leaf {name!r} at {path}: add its "
+                "batch axis to serve.engine._CACHE_BATCH_AXIS")
+        shape = [1] * n.ndim
+        shape[ax] = slot_mask.shape[0]
+        return jnp.where(slot_mask.reshape(shape), n, o)
+    return jax.tree_util.tree_map_with_path(merge, old, new)
+
 
 @dataclasses.dataclass
 class Request:
@@ -37,9 +67,13 @@ class ServeEngine:
         self.cache_len = cache_len
         self.key = jax.random.PRNGKey(seed)
 
-        self._decode = jax.jit(
-            lambda p, c, t, pos: T.decode_step(cfg, p, c, t, pos),
-            donate_argnums=(1,))
+        def _masked_step(p, c, t, pos, slot_mask):
+            logits, new_c = T.decode_step(cfg, p, c, t, pos)
+            # donation is safe: the merge reads the pre-step cache values
+            # inside the same traced computation
+            return logits, _merge_cache(c, new_c, slot_mask)
+
+        self._decode = jax.jit(_masked_step, donate_argnums=(1,))
         self.cache = T.init_cache(cfg, n_slots, cache_len)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, np.int32)
@@ -55,28 +89,35 @@ class ServeEngine:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
     def _admit(self):
-        """Prefill-by-decode: feed prompt tokens through decode steps for the
-        admitted slot (simple and correct; a production path would use the
-        batched prefill kernel per slot)."""
+        """Prefill-by-decode: feed all prompt tokens EXCEPT the last through
+        decode steps for the admitted slot (simple and correct; a production
+        path would use the batched prefill kernel per slot).  The last
+        prompt token is left for the first ``step()``, which decodes it at
+        its true position and samples the first output token from its
+        logits — prefilling it here would write its KV twice (pos L-1 and
+        L) and condition the continuation on a duplicated token."""
         for slot in self._free_slots():
             if not self.queue:
                 break
             req = self.queue.pop(0)
             self.slot_req[slot] = req
             self.slot_pos[slot] = 0
-            # teacher-force the prompt through this slot
-            for t in range(len(req.prompt)):
+            # teacher-force the prompt through this slot; only this slot's
+            # cache rows may be touched (other slots can be mid-decode)
+            mask = np.zeros(self.n_slots, bool)
+            mask[slot] = True
+            mask = jnp.asarray(mask)
+            for t in range(len(req.prompt) - 1):
                 tok = self._slot_tokens(slot, req.prompt[t])
                 _, self.cache = self._decode(
                     self.params, self.cache, tok,
-                    jnp.asarray(int(self.slot_pos[slot]), jnp.int32))
+                    jnp.asarray(int(self.slot_pos[slot]), jnp.int32), mask)
                 self.slot_pos[slot] += 1
 
     def _slot_tokens(self, slot: int, value) -> jnp.ndarray:
         """Batch token vector with ``value`` in ``slot`` and pad elsewhere.
-        NOTE: positions are per-slot; this simple engine decodes slots with a
-        shared pos when batching — correct when slots advance together, which
-        the step() loop guarantees after admission."""
+        Pad rows produce garbage logits (ignored) and their cache writes are
+        discarded by the slot mask in ``_decode``."""
         if self.cfg.input_mode == "codebooks":
             arr = np.zeros((self.n_slots, self.cfg.n_codebooks), np.int32)
         else:
@@ -90,8 +131,10 @@ class ServeEngine:
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return
-        # batched greedy decode: all active slots share a position counter
-        # per slot; we step them one at a time if positions diverge
+        # batched greedy decode: slots sharing a position step together; when
+        # positions diverge, each group decodes with a slot mask so only the
+        # group's cache rows are written (pad rows must never clobber other
+        # groups' entries at this pos)
         pos_groups: Dict[int, list] = {}
         for s in active:
             pos_groups.setdefault(int(self.slot_pos[s]), []).append(s)
@@ -101,14 +144,16 @@ class ServeEngine:
                                 np.int32)
             else:
                 toks = np.zeros((self.n_slots,), np.int32)
+            mask = np.zeros(self.n_slots, bool)
             for s in slots:
                 last = (self.slot_req[s].out_tokens[-1]
                         if self.slot_req[s].out_tokens
                         else self.slot_req[s].prompt[-1])
                 toks[s] = last
+                mask[s] = True
             logits, self.cache = self._decode(
                 self.params, self.cache, jnp.asarray(toks),
-                jnp.asarray(pos, jnp.int32))
+                jnp.asarray(pos, jnp.int32), jnp.asarray(mask))
             logits = np.asarray(logits, np.float32)
             for s in slots:
                 req = self.slot_req[s]

@@ -84,3 +84,52 @@ def test_from_csr_matches_from_dense_blocking():
     b = bcsr_lib.from_dense(dense, (16, 16))
     assert a.nnzb == b.nnzb
     np.testing.assert_array_equal(a.to_dense(), b.to_dense())
+
+
+@pytest.mark.parametrize("use_scipy", [True, False])
+def test_from_csr_accumulates_duplicates(monkeypatch, use_scipy):
+    """Duplicate COO coordinates must SUM (scipy sum_duplicates parity),
+    not keep only the last-written value."""
+    rng = np.random.default_rng(12)
+    n_entries = 200
+    rows = rng.integers(0, 48, n_entries)
+    cols = rng.integers(0, 64, n_entries)
+    data = rng.standard_normal(n_entries).astype(np.float32)
+    # force collisions: repeat a third of the coordinates
+    rows = np.concatenate([rows, rows[:70]])
+    cols = np.concatenate([cols, cols[:70]])
+    data = np.concatenate([data, rng.standard_normal(70).astype(np.float32)])
+    # hand-build CSR arrays WITH duplicate column entries per row
+    # (scipy's constructors would silently pre-sum them)
+    order = np.argsort(rows, kind="stable")
+    rows_s, indices, data_s = rows[order], cols[order], data[order]
+    indptr = np.zeros(49, np.int64)
+    np.add.at(indptr, rows_s + 1, 1)
+    indptr = np.cumsum(indptr)
+    want = sp.coo_matrix((data, (rows, cols)), shape=(48, 64)).tocsr()
+    want.sum_duplicates()
+    if not use_scipy:
+        monkeypatch.setattr(bcsr_lib, "_sp", None)
+    a = bcsr_lib.from_csr(indptr, indices, data_s, (48, 64), (16, 16))
+    np.testing.assert_allclose(a.to_dense(), want.toarray(),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_ensure_nonempty_rows_return_mask_tags_padding_only():
+    """real_mask=False exactly on the appended padding entries: genuinely
+    zero ORIGINAL blocks must stay real (trainable)."""
+    a = bcsr_lib.random_bcsr(6, (256, 64), (16, 16), 0.08, fill_density=0.5)
+    # manufacture a genuinely-zero stored block
+    a.vals[0][:] = 0
+    assert (a.blocks_per_row() == 0).any(), "want empty rows in the fixture"
+    a_p, real = a.ensure_nonempty_rows(return_mask=True)
+    assert real.sum() == a.nnzb                  # every original entry real
+    zero_blocks = np.abs(a_p.vals).sum(axis=(1, 2)) == 0
+    # some real entries ARE zero blocks (the one we zeroed) — the old
+    # nonzero-content heuristic would have dropped them
+    assert (real & zero_blocks).any()
+    # padding entries are all zero blocks in previously-empty rows
+    bpr0 = a.blocks_per_row()
+    for s in np.flatnonzero(~real):
+        assert zero_blocks[s]
+        assert bpr0[a_p.row_ids[s]] == 0

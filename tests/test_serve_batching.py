@@ -1,0 +1,101 @@
+"""Serving engine regression tests: batched decode with diverged slot
+positions must not corrupt other slots' KV cache (the per-group decode
+writes pad-token KV for every batch row unless masked per slot)."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.serve.engine import Request, ServeEngine, _merge_cache
+
+
+def _tiny_cfg() -> ModelConfig:
+    return ModelConfig(
+        name="serve-test", family="dense", layout="attn_mlp",
+        n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+        d_ff=64, vocab_size=97, dtype="float32")
+
+
+def _decode_all(cfg, params, jobs, n_slots, max_new=3):
+    """jobs: [(rid, prompt_list)] -> {rid: out_tokens} via one engine."""
+    eng = ServeEngine(cfg, params, n_slots=n_slots, cache_len=32)
+    for rid, prompt in jobs:
+        eng.submit(Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                           max_new_tokens=max_new))
+    done = eng.run()
+    assert sorted(done) == sorted(r for r, _ in jobs)
+    return {rid: req.out_tokens for rid, req in done.items()}
+
+
+def test_concurrent_divergent_positions_match_sequential():
+    """Two requests with different prompt lengths decoded concurrently
+    (diverged positions -> per-group decode calls) must produce exactly the
+    tokens each yields when decoded alone."""
+    cfg = _tiny_cfg()
+    params = T.init_params(cfg, seed=0)
+    jobs = [(0, [1, 2, 3, 4, 5, 6, 7]), (1, [9, 8])]
+
+    solo = {}
+    for rid, prompt in jobs:
+        solo.update(_decode_all(cfg, params, [(rid, prompt)], n_slots=1))
+    batched = _decode_all(cfg, params, jobs, n_slots=2)
+
+    for rid, _ in jobs:
+        assert batched[rid] == solo[rid], (
+            f"request {rid}: concurrent {batched[rid]} != solo {solo[rid]} "
+            "— cross-slot KV-cache corruption")
+
+
+def test_engine_matches_direct_decode_oracle():
+    """Engine greedy decoding must equal a straight decode_step loop: all
+    prompt tokens at pos 0..L-1, first output sampled from the LAST prompt
+    token's logits.  Catches the duplicated-tail bug (prefilling prompt[-1]
+    and then feeding it again writes its KV twice and conditions the whole
+    continuation on a prompt with a doubled last token)."""
+    cfg = _tiny_cfg()
+    params = T.init_params(cfg, seed=0)
+    # this prompt demonstrably diverges under the duplicated-tail bug
+    # (buggy greedy collapses to repeating the last prompt token)
+    prompt = [58, 93, 70, 61, 52]
+    max_new = 4
+
+    cache = T.init_cache(cfg, 1, 32)
+    logits = None
+    pos = 0
+    for t in prompt:
+        logits, cache = T.decode_step(
+            cfg, params, cache, jnp.asarray([t], jnp.int32),
+            jnp.asarray(pos, jnp.int32))
+        pos += 1
+    oracle = []
+    for _ in range(max_new):
+        tok = int(np.asarray(logits)[0].argmax(-1))
+        oracle.append(tok)
+        logits, cache = T.decode_step(
+            cfg, params, cache, jnp.asarray([tok], jnp.int32),
+            jnp.asarray(pos, jnp.int32))
+        pos += 1
+
+    got = _decode_all(cfg, params, [(0, prompt)], n_slots=1,
+                      max_new=max_new)[0]
+    assert got == oracle, (got, oracle)
+
+
+def test_merge_cache_masks_per_slot():
+    """Only masked slots' rows may change; every cache-leaf layout
+    (attn k/v, mla ckv/krope, ssd conv/state) resolves its batch axis."""
+    B = 4
+    old = {
+        "k": jnp.zeros((2, B, 8, 2, 4)), "v": jnp.zeros((2, B, 8, 2, 4)),
+        "ckv": jnp.zeros((B, 8, 6)), "krope": jnp.zeros((B, 8, 2)),
+        "conv": jnp.zeros((B, 3, 5)), "state": jnp.zeros((B, 2, 3, 4)),
+    }
+    new = {k: jnp.ones_like(v) for k, v in old.items()}
+    mask = jnp.asarray([True, False, True, False])
+    merged = _merge_cache(old, new, mask)
+    for name, leaf in merged.items():
+        ax = {"k": -4, "v": -4, "ckv": -3, "krope": -3,
+              "conv": -3, "state": -4}[name]
+        moved = np.moveaxis(np.asarray(leaf), ax, 0)
+        assert (moved[np.asarray(mask)] == 1).all(), name
+        assert (moved[~np.asarray(mask)] == 0).all(), name
