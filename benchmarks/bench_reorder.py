@@ -17,10 +17,12 @@ Emits machine-readable JSON consumed by the CI diff step:
 
 ``--diff`` checks (a) no baseline case disappeared, (b) on clustered cases
 the fast reduction stays >= 95% of the reference's (computed fresh, so the
-gate is falsifiable), (c) the fast reduction stays >= 90% of the committed
-baseline's, and (d) the 4k-row case keeps a clustering speedup above a
-conservative floor (absolute times are machine-dependent and only
-reported).  Refresh the baseline with
+gate is falsifiable), and (c) the fast reduction stays >= 90% of the
+committed baseline's.  Clustering SPEEDUP is wall-clock on a shared
+runner — matching the autotune baseline's "report, never compare" policy
+for absolute times, a 4k-row speedup below the expected floor prints a
+WARNING but never fails CI (the nnzb-reduction gates above are the
+deterministic, falsifiable ones).  Refresh the baseline with
 ``--out benchmarks/BENCH_reorder.baseline.json``.
 """
 from __future__ import annotations
@@ -48,9 +50,9 @@ from repro.kernels import ops
 BLOCK = (16, 16)
 TAU = 0.7
 MAX_CANDIDATES = 4096
-# conservative CI floor for the 4k-case clustering speedup (shared runners
-# are noisy and may lack the native kernel; the report carries the real
-# number — >= 50x with the native kernel, the tentpole target)
+# expected 4k-case clustering speedup (>= 50x with the native kernel).
+# Wall-clock on shared CI runners is not falsifiable — below this floor
+# the diff prints a WARNING, it never fails (nnzb gates stay hard).
 MIN_SPEEDUP_4K = 8.0
 MIN_REDUCTION_VS_REF = 0.95
 MIN_REDUCTION_VS_BASE = 0.90
@@ -176,9 +178,12 @@ def diff(result: dict, baseline: dict) -> int:
                     f"{name}: reduction {c['reduction_fast']}x regressed "
                     f"vs committed baseline {base['reduction_fast']}x")
         if "4k" in name and c["clustering_speedup"] < MIN_SPEEDUP_4K:
-            failures.append(
-                f"{name}: clustering speedup {c['clustering_speedup']}x "
-                f"below the {MIN_SPEEDUP_4K}x CI floor")
+            # wall-clock on shared runners: warn, never gate (absolute
+            # times follow the autotune baseline's report-only policy)
+            print(f"WARNING: {name}: clustering speedup "
+                  f"{c['clustering_speedup']}x below the expected "
+                  f"{MIN_SPEEDUP_4K}x (timing-only signal; not a failure)",
+                  file=sys.stderr)
     if failures:
         print("REORDER REGRESSION:", file=sys.stderr)
         for f in failures:

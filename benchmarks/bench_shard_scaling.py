@@ -1,0 +1,172 @@
+"""Sharded-SpMM scaling benchmark (``launch.dist_spmm``) with a CI
+regression gate, in the style of ``bench_autotune.py`` / ``bench_reorder.py``.
+
+For each structure case and shard count in {1, 2, 4, 8} it reports:
+  * per-shard nonzero-block loads of the LPT partition
+    (``core.permute.shard_bins``) and the imbalance (max/mean) vs a naive
+    contiguous equal-row split — the balance the partition buys;
+  * wall-clock of the sharded SpMM (in-process local mode — the math the
+    shard_map runs per device) vs the unsharded reference.
+
+Emits machine-readable JSON consumed by the CI diff step:
+
+  python benchmarks/bench_shard_scaling.py --smoke \
+      --out BENCH_shard_scaling.json \
+      --diff benchmarks/BENCH_shard_scaling.baseline.json
+
+Gate policy (matching the autotune baseline's "report, never compare"
+stance on absolute times): nnzb-BALANCE gates are hard — they are
+deterministic functions of the seeded structures — while timings are
+reported only.  ``--diff`` checks (a) no baseline case disappeared,
+(b) the LPT imbalance never exceeds the contiguous split's, and (c) the
+imbalance stays within 10% of the committed baseline's.  Refresh with
+``--out benchmarks/BENCH_shard_scaling.baseline.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (os.path.join(_ROOT, "src"), _ROOT):
+    if _p not in sys.path:  # runnable without a manual PYTHONPATH prefix
+        sys.path.insert(0, _p)
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import bcsr as bcsr_lib
+from repro.core import topology
+from repro.kernels import ops
+from repro.launch import dist_spmm
+
+SHARD_COUNTS = (1, 2, 4, 8)
+MAX_IMBALANCE_VS_BASE = 1.10
+
+
+def _cases(smoke: bool):
+    s = 1 if smoke else 4
+    block = (16, 16)
+    cases = [
+        ("power_law_skew", bcsr_lib.from_scipy(
+            topology.power_law(512 * s, 5.0, seed=2), block)),
+        ("clustered", bcsr_lib.from_scipy(
+            topology.blocked_random(n=512 * s, nnz_target=9000 * s,
+                                    cluster=16, seed=1), block)),
+        ("uniform_p15", bcsr_lib.random_bcsr(
+            0, (512 * s, 256 * s), block, 0.15)),
+    ]
+    return cases
+
+
+def _time(fn, b, iters=3):
+    jax.block_until_ready(fn(b))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(b))
+        ts.append(time.perf_counter() - t0)
+    return float(np.min(ts))
+
+
+def run(smoke: bool = True) -> dict:
+    n = 64 if smoke else 256
+    rows = []
+    for name, a in _cases(smoke):
+        arrays, meta = ops.prepare_sparse(a, dtype=jnp.float32)
+        b = jnp.asarray(np.random.default_rng(0).standard_normal(
+            (meta.shape[1], n)).astype(np.float32))
+        ref_s = _time(jax.jit(
+            lambda bb: ops.spmm(arrays, meta, bb, backend="xla")), b)
+        for S in SHARD_COUNTS:
+            st = dist_spmm.shard_balance_stats(a, S)
+            sharr, smeta = dist_spmm.prepare_sharded(a, S, dtype=jnp.float32)
+            sh_s = _time(jax.jit(
+                lambda bb, _sh=sharr, _sm=smeta: dist_spmm.spmm_sharded(
+                    _sh, _sm, bb, backend="xla")), b)
+            row = {
+                "name": f"{name}/s{S}",
+                "case": name,
+                "n_shards": S,
+                "nnzb": st["nnzb"],
+                "loads": st["loads"],
+                "imbalance": st["imbalance"],
+                "contig_imbalance": st["contig_imbalance"],
+                "load_cv_pct": st["load_cv_pct"],
+                # absolute times are machine-dependent: reported, never gated
+                "spmm_ref_us": round(ref_s * 1e6, 1),
+                "spmm_sharded_us": round(sh_s * 1e6, 1),
+            }
+            rows.append(row)
+            print(f"{row['name']:>20}: loads {row['loads']} "
+                  f"(imb {row['imbalance']}x vs contig "
+                  f"{row['contig_imbalance']}x), sharded "
+                  f"{row['spmm_sharded_us']}us vs ref {row['spmm_ref_us']}us",
+                  file=sys.stderr)
+    return {
+        "bench": "shard_scaling",
+        "mode": "smoke" if smoke else "full",
+        "shard_counts": list(SHARD_COUNTS),
+        "cases": rows,
+    }
+
+
+def diff(result: dict, baseline: dict) -> int:
+    """Regression diff; returns a process exit code.  Balance gates are
+    hard (deterministic); timings are informational."""
+    got = {c["name"]: c for c in result["cases"]}
+    want = {c["name"]: c for c in baseline["cases"]}
+    failures = []
+    for name in sorted(set(want) - set(got)):
+        failures.append(f"case disappeared vs baseline: {name}")
+    for name in sorted(set(got) - set(want)):
+        print(f"note: new case not in baseline: {name}", file=sys.stderr)
+    for name, c in got.items():
+        if c["imbalance"] > c["contig_imbalance"] + 1e-9:
+            failures.append(
+                f"{name}: LPT imbalance {c['imbalance']}x exceeds the "
+                f"naive contiguous split's {c['contig_imbalance']}x")
+        base = want.get(name)
+        if base and c["imbalance"] > \
+                base["imbalance"] * MAX_IMBALANCE_VS_BASE:
+            failures.append(
+                f"{name}: imbalance {c['imbalance']}x regressed vs "
+                f"committed baseline {base['imbalance']}x")
+    if failures:
+        print("SHARD-SCALING REGRESSION:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print(f"shard_scaling diff OK: {len(got)} cases", file=sys.stderr)
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small case set / small N (CI job)")
+    ap.add_argument("--out", default="BENCH_shard_scaling.json",
+                    help="where to write the results JSON")
+    ap.add_argument("--diff", default=None, metavar="BASELINE",
+                    help="after running, diff results against this baseline")
+    args = ap.parse_args()
+
+    result = run(args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1, sort_keys=True)
+    print(f"wrote {args.out}", file=sys.stderr)
+
+    if args.diff:
+        with open(args.diff) as f:
+            baseline = json.load(f)
+        return diff(result, baseline)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,4 +1,16 @@
-"""Benchmark runner — one module per paper table/figure.
+"""Benchmark runner — CI suite entrypoint + paper-figure modules.
+
+CI suite mode (the single entrypoint the ``benchmark-smoke`` job runs):
+
+  python benchmarks/run.py --smoke --diff-all
+
+runs every gated benchmark (autotune, reorder, shard_scaling), writes one
+``BENCH_<name>.json`` each (a single combined artifact for CI), diffs each
+against its committed ``benchmarks/BENCH_<name>.baseline.json``, and exits
+nonzero if ANY diff fails.  Refresh a baseline with the individual
+module's ``--out benchmarks/BENCH_<name>.baseline.json``.
+
+Figure mode (legacy, no flags): one module per paper table/figure —
 
   fig2   — perf model T_tot = T_e*n_e + T_init fit (paper Fig. 2 / SIII)
   fig3   — reordering block-count + load-balance effect (Figs. 3-4 / SVI-A)
@@ -12,11 +24,47 @@ Prints ``name,us_per_call,derived`` CSV.  Roofline tables for the 40
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import time
 
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_ROOT = os.path.dirname(_HERE)
+for _p in (os.path.join(_ROOT, "src"), _ROOT):
+    if _p not in sys.path:  # runnable without a manual PYTHONPATH prefix
+        sys.path.insert(0, _p)
 
-def main() -> None:
+# gated CI benchmarks: (module name, baseline file)
+SUITE = (
+    ("bench_autotune", "BENCH_autotune.baseline.json"),
+    ("bench_reorder", "BENCH_reorder.baseline.json"),
+    ("bench_shard_scaling", "BENCH_shard_scaling.baseline.json"),
+)
+
+
+def run_suite(smoke: bool, diff_all: bool, out_dir: str = ".") -> int:
+    import importlib
+    rc = 0
+    for mod_name, baseline_name in SUITE:
+        mod = importlib.import_module(f"benchmarks.{mod_name}")
+        short = mod_name.replace("bench_", "")
+        print(f"# === {short} ===", file=sys.stderr)
+        result = mod.run(smoke)
+        out_path = os.path.join(out_dir, f"BENCH_{short}.json")
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=1, sort_keys=True)
+        print(f"wrote {out_path}", file=sys.stderr)
+        if diff_all:
+            baseline_path = os.path.join(_HERE, baseline_name)
+            with open(baseline_path) as f:
+                baseline = json.load(f)
+            rc |= mod.diff(result, baseline)
+    return rc
+
+
+def run_figures() -> None:
     from benchmarks import (bench_band_sweep, bench_kernels,
                             bench_n_scaling, bench_perf_model,
                             bench_reorder, bench_suitesparse_like)
@@ -29,5 +77,25 @@ def main() -> None:
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
 
 
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="suite mode, small cases (the CI job)")
+    ap.add_argument("--full", action="store_true",
+                    help="suite mode, full-size cases")
+    ap.add_argument("--diff-all", action="store_true",
+                    help="diff every suite result against its committed "
+                         "baseline; exit nonzero on any regression")
+    ap.add_argument("--out-dir", default=".",
+                    help="where suite mode writes BENCH_*.json")
+    args = ap.parse_args()
+
+    if args.smoke or args.full or args.diff_all:
+        return run_suite(smoke=not args.full, diff_all=args.diff_all,
+                         out_dir=args.out_dir)
+    run_figures()
+    return 0
+
+
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

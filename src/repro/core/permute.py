@@ -329,6 +329,63 @@ def _expand_block_row_perm(brperm: np.ndarray, h: int, n_rows: int
     ).astype(np.int64)
 
 
+def shard_bins(bpr: np.ndarray, n_shards: int, *,
+               rows_per_shard: Optional[int] = None,
+               max_load: Optional[int] = None) -> np.ndarray:
+    """Capacitated equal-cardinality LPT: block-row -> shard assignment.
+
+    The bin-assignment primitive behind ``shard_balance`` (and the
+    partitioned execution path in ``launch.dist_spmm``): block-rows are
+    placed heaviest-first onto the least-loaded shard, subject to every
+    shard receiving at most ``rows_per_shard`` block-rows (default
+    ``ceil(n_brows / n_shards)``).  The cardinality cap is what makes the
+    partition STATIC-shape friendly — each shard owns exactly
+    ``rows_per_shard`` block-row slots (trailing slots virtual/empty), so
+    per-shard operands keep fixed shapes across structures of the same
+    dims.
+
+    ``max_load`` optionally caps per-shard nonzero-block counts (the
+    model-weight path derives it from dims so scan-stacked layers share
+    leaf shapes); assignment that cannot fit raises rather than silently
+    producing ragged shards.
+
+    Returns ``assign [n_brows] int64`` with values in ``[0, n_shards)``.
+    """
+    bpr = np.asarray(bpr, dtype=np.int64)
+    n_brows = bpr.size
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    rps = rows_per_shard or -(-max(n_brows, 1) // n_shards)
+    if rps * n_shards < n_brows:
+        raise ValueError(
+            f"rows_per_shard={rps} x n_shards={n_shards} cannot hold "
+            f"{n_brows} block-rows")
+    order = np.argsort(-bpr, kind="stable")   # heaviest first
+    load = np.zeros(n_shards, dtype=np.int64)
+    count = np.zeros(n_shards, dtype=np.int64)
+    assign = np.empty(n_brows, dtype=np.int64)
+    for br in order:
+        elig = count < rps
+        if max_load is not None:
+            fits = elig & (load + bpr[br] <= max_load)
+            if fits.any():
+                elig = fits
+            elif not elig.any():
+                raise ValueError("shard_bins: no shard has row capacity left")
+            else:
+                raise ValueError(
+                    f"shard_bins: block-row with {int(bpr[br])} blocks "
+                    f"cannot fit any shard under max_load={max_load} "
+                    f"(loads={load.tolist()}); raise the per-shard nnzb "
+                    "budget or lower n_shards")
+        cand = np.flatnonzero(elig)
+        s = cand[np.argmin(load[cand])]
+        assign[br] = s
+        load[s] += bpr[br]
+        count[s] += 1
+    return assign
+
+
 def shard_balance_rows(csr: sp.csr_matrix, block: Tuple[int, int] = (128, 128),
                        n_shards: int = 8) -> np.ndarray:
     """Element-row permutation from the block-row LPT shard balancing

@@ -42,6 +42,17 @@ class SparsitySpec:
     math is unchanged.  ``shard_balance`` balances per-shard nonzero-block
     loads over ``reorder_shards`` shards (0 = derive from the runtime
     device count via ``launch.sharding.spmm_shard_count``).
+
+    ``shards > 0`` switches the layer to the PARTITIONED execution path
+    (``launch.dist_spmm``): the weight is split over block-rows into
+    ``shards`` load-balanced slices with static per-shard schedules, each
+    shard resolves its own kernel variant, and the apply runs as a
+    ``shard_map`` when a compatible mesh is active
+    (``dist_spmm.use_spmm_mesh``) or as the in-process equivalent
+    otherwise.  Per-shard slice shapes are derived from the layer dims
+    alone (``shard_shapes``), so scan-stacked layers with different
+    structures still share every leaf shape.  ``shard_cols`` adds the
+    optional 2D column split over the activation panel.
     """
     density: float = 0.1            # fraction of nonzero blocks
     block: Tuple[int, int] = (128, 128)
@@ -51,6 +62,8 @@ class SparsitySpec:
     tune_n: int = 0                 # measured sweep at init for this N
     reorder: str = "identity"       # weight row-permutation scheme
     reorder_shards: int = 0         # shard_balance bins (0 = auto)
+    shards: int = 0                 # >0: row-partitioned execution shards
+    shard_cols: int = 1             # optional column split over activations
 
 
 def _nnzb_for(spec: SparsitySpec, out_dim: int, in_dim: int) -> int:
@@ -71,14 +84,63 @@ def _reorder_shards(spec: SparsitySpec) -> int:
     return spmm_shard_count()
 
 
+def shard_shapes(spec: SparsitySpec, out_dim: int, in_dim: int):
+    """Dims-only per-shard static sizes: (rows_per_shard, nnzb_per_shard,
+    nnzb_t_per_shard).
+
+    Scan-stacked layers share one spec but draw different structures, so
+    the per-shard budgets CANNOT depend on any one layer's LPT outcome.
+    The entry budget is the balanced average plus 25% skew headroom (and a
+    small-case floor) plus one slot per row for virtual-row sentinels;
+    ``prepare_sharded`` raises if a structure is too skewed to fit, which
+    for the near-uniform ``random_bcsr_exact`` patterns does not happen."""
+    h, w = spec.block
+    S = spec.shards
+    nbr, nbc = -(-out_dim // h), -(-in_dim // w)
+    nnzb = _nnzb_for(spec, out_dim, in_dim)
+    rps = -(-nbr // S)
+    eff = min(S, nbr)
+    avg = -(-nnzb // eff)
+    nnzb_ps = min(nnzb + rps, avg + max(avg // 4, 8) + rps)
+    return rps, nnzb_ps, nnzb_ps + nbc
+
+
 def init_sparse_linear(key: int, in_dim: int, out_dim: int,
                        spec: SparsitySpec, dtype=jnp.bfloat16):
     """Returns (params, meta): params is a pytree of device arrays (vals is
     the trainable leaf; index arrays — including the ``reorder`` row
-    permutation — ride along), meta is static."""
+    permutation — ride along), meta is static.
+
+    With ``spec.shards > 0`` the params carry the row-partitioned index
+    structure from ``launch.dist_spmm.prepare_sharded`` instead (``vals``
+    stays the flat trainable leaf) and ``meta`` is a ``ShardedMeta``."""
     a = bcsr_lib.random_bcsr_exact(
         key, (out_dim, in_dim), spec.block, _nnzb_for(spec, out_dim, in_dim),
         dtype=np.float32)
+    if spec.shards > 0:
+        from repro.launch import dist_spmm  # local: layering
+        rps, nnzb_ps, _ = shard_shapes(spec, out_dim, in_dim)
+        sharr, smeta = dist_spmm.prepare_sharded(
+            a, spec.shards, col_shards=spec.shard_cols, dtype=dtype,
+            reorder=spec.reorder, rows_per_shard=rps,
+            nnzb_per_shard=nnzb_ps)
+        if spec.backend == "auto" and spec.tune_n > 0:
+            # sharded analogue of the unsharded tune() below: measured
+            # winners land under each shard's v3 fingerprint
+            dist_spmm.tune_shards(sharr, smeta, spec.tune_n,
+                                  interpret=spec.interpret)
+        params = {
+            "vals": sharr.vals,
+            "shard_src": sharr.src_index,
+            "shard_row_ids": sharr.row_ids,
+            "shard_col_ids": sharr.col_ids,
+            "shard_mask": sharr.real_mask,
+            "shard_t_perm": sharr.t_perm,
+            "shard_t_row_ids": sharr.t_row_ids,
+            "shard_t_col_ids": sharr.t_col_ids,
+            "gather_rows": sharr.gather_rows,
+        }
+        return params, smeta
     n_shards = _reorder_shards(spec)
     # block_row granularity: the permutation relabels whole block-rows, so
     # nnzb (and every leaf shape) matches sparse_linear_specs exactly
@@ -106,11 +168,43 @@ def init_sparse_linear(key: int, in_dim: int, out_dim: int,
 
 def sparse_linear_specs(in_dim: int, out_dim: int, spec: SparsitySpec,
                         dtype=jnp.bfloat16):
-    """ShapeDtypeStruct pytree (dry-run path — no host work, no allocation)."""
+    """ShapeDtypeStruct pytree (dry-run path — no host work, no allocation).
+
+    With ``spec.shards > 0`` the specs mirror the partitioned layout of
+    ``init_sparse_linear`` exactly — every per-shard size comes from
+    ``shard_shapes`` (dims only), so specs and real params always agree.
+    The per-shard metas carry no structure stats (max_bpr = 0), matching
+    the unsharded specs' behavior: ``auto`` dispatch falls back to the
+    streaming kernel, ``row_loop`` raises."""
     h, w = spec.block
     nnzb = _nnzb_for(spec, out_dim, in_dim)
     nbr, nbc = -(-out_dim // h), -(-in_dim // w)
     sds = jax.ShapeDtypeStruct
+    if spec.shards > 0:
+        from repro.launch import dist_spmm  # local: layering
+        S = spec.shards
+        rps, nnzb_ps, nnzb_t_ps = shard_shapes(spec, out_dim, in_dim)
+        params = {
+            "vals": sds((nnzb, h, w), dtype),
+            "shard_src": sds((S, nnzb_ps), jnp.int32),
+            "shard_row_ids": sds((S, nnzb_ps), jnp.int32),
+            "shard_col_ids": sds((S, nnzb_ps), jnp.int32),
+            "shard_mask": sds((S, nnzb_ps), jnp.bool_),
+            "shard_t_perm": sds((S, nnzb_t_ps), jnp.int32),
+            "shard_t_row_ids": sds((S, nnzb_t_ps), jnp.int32),
+            "shard_t_col_ids": sds((S, nnzb_t_ps), jnp.int32),
+            "gather_rows": sds((out_dim,), jnp.int32),
+        }
+        shard_meta = ops.SparseMeta(
+            shape=(rps * h, in_dim), block=spec.block, n_block_rows=rps,
+            n_block_cols=nbc, nnzb=nnzb_ps, nnzb_t=nnzb_t_ps,
+            reorder="identity", n_shards=S)
+        meta = dist_spmm.ShardedMeta(
+            shape=(out_dim, in_dim), block=spec.block, n_shards=S,
+            col_shards=spec.shard_cols, rows_per_shard=rps, nnzb=nnzb,
+            nnzb_per_shard=nnzb_ps, nnzb_t_per_shard=nnzb_t_ps,
+            shard_metas=(shard_meta,) * S, reorder=spec.reorder)
+        return params, meta
     params = {
         "vals": sds((nnzb, h, w), dtype),
         "row_ids": sds((nnzb,), jnp.int32),
@@ -128,24 +222,65 @@ def sparse_linear_specs(in_dim: int, out_dim: int, spec: SparsitySpec,
     return params, meta
 
 
-def apply_sparse_linear(params: dict, meta: ops.SparseMeta, x: jnp.ndarray,
+def shard_balance_report(in_dim: int, out_dim: int, spec: SparsitySpec,
+                         seed: int = 7919) -> dict:
+    """Per-shard nnzb balance of the layer this spec + seed would build
+    (host-only; the dry-run prints it so the partition quality is visible
+    before any launch)."""
+    from repro.launch import dist_spmm  # local: layering
+    a = bcsr_lib.random_bcsr_exact(
+        seed, (out_dim, in_dim), spec.block,
+        _nnzb_for(spec, out_dim, in_dim), dtype=np.float32)
+    rps, _, _ = shard_shapes(spec, out_dim, in_dim)
+    return dist_spmm.shard_balance_stats(a, spec.shards, rows_per_shard=rps)
+
+
+def apply_sparse_linear(params: dict, meta, x: jnp.ndarray,
                         spec: SparsitySpec) -> jnp.ndarray:
     """y[..., out] = x[..., in] @ W^T via C = W @ x^T.
 
-    The token dim of the SpMM is sharded over ALL mesh axes (weights are
-    replicated — see launch/sharding.py BCSR rules): each chip streams the
-    full nonzero-block list against its token slice, which is exactly the
-    paper's kernel with B = the local activation panel (§Perf C2)."""
+    Unsharded: the token dim of the SpMM is sharded over ALL mesh axes
+    (weights are replicated — see launch/sharding.py BCSR rules): each
+    chip streams the full nonzero-block list against its token slice,
+    which is exactly the paper's kernel with B = the local activation
+    panel (§Perf C2).
+
+    ``spec.shards > 0`` (``meta`` is a ``ShardedMeta``): the weight's
+    block-rows are partitioned instead — each shard streams only its
+    balanced slice, as a ``shard_map`` over the mesh installed by
+    ``dist_spmm.use_spmm_mesh`` (in-process equivalent when none is)."""
     from repro.launch.constrain import BATCH, MODEL, constrain
+    lead = x.shape[:-1]
+    in_dim = x.shape[-1]
+    xt = x.reshape(-1, in_dim).T                     # [K, T]
+    if spec.shards > 0:
+        from repro.launch import dist_spmm  # local: layering
+        sharr = dist_spmm.ShardedArrays(
+            vals=params["vals"], src_index=params["shard_src"],
+            row_ids=params["shard_row_ids"], col_ids=params["shard_col_ids"],
+            real_mask=params["shard_mask"], t_perm=params["shard_t_perm"],
+            t_row_ids=params["shard_t_row_ids"],
+            t_col_ids=params["shard_t_col_ids"],
+            gather_rows=params["gather_rows"])
+        mesh = dist_spmm.current_spmm_mesh()
+        if mesh is None:
+            # in-process fallback under a TRAINING mesh: keep the token
+            # panel sharded over all ambient axes, exactly like the
+            # unsharded path (each chip runs every slice against its own
+            # token slice)
+            xt = constrain(xt, None, BATCH + (MODEL,))
+        c = dist_spmm.spmm_sharded(
+            sharr, meta, xt, backend=spec.backend, bn=spec.bn,
+            interpret=spec.interpret, mesh=mesh)
+        if mesh is None:
+            c = constrain(c, None, BATCH + (MODEL,))
+        return c.T.reshape(*lead, meta.shape[0])
     arrays = ops.SparseArrays(
         vals=params["vals"], row_ids=params["row_ids"],
         col_ids=params["col_ids"], real_mask=params["real_mask"],
         t_perm=params["t_perm"], t_row_ids=params["t_row_ids"],
         t_col_ids=params["t_col_ids"],
         row_perm=params.get("row_perm"), inv_perm=params.get("inv_perm"))
-    lead = x.shape[:-1]
-    in_dim = x.shape[-1]
-    xt = x.reshape(-1, in_dim).T                     # [K, T]
     xt = constrain(xt, None, BATCH + (MODEL,))       # tokens over all axes
     c = ops.spmm(arrays, meta, xt, backend=spec.backend, bn=spec.bn,
                  interpret=spec.interpret)           # [M, T]

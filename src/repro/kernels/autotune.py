@@ -146,7 +146,11 @@ class Fingerprint:
     entries (pad to 10%, skew to 25%, N to the next power of two).
     ``reorder`` is part of the key: a permuted matrix has a different
     blocks-per-row skew than its un-permuted twin, so cached picks must
-    not alias across reorder schemes."""
+    not alias across reorder schemes.  ``n_shards`` (v3) is part of the
+    key too: a shard of a row-partitioned operand (``launch.dist_spmm``)
+    has its own stats AND a different execution context (its N-tile shares
+    the device with the other shards), so per-shard picks must not alias
+    the unsharded twin's entries."""
     n_block_rows: int
     n_block_cols: int
     block: Tuple[int, int]
@@ -155,32 +159,36 @@ class Fingerprint:
     skew_bucket: int     # blocks-per-row cv in 25% buckets
     n_bucket: int        # next pow2 of N
     reorder: str = "identity"
+    n_shards: int = 1    # shard count of the partitioned operand (1 = whole)
 
     def key(self) -> str:
         h, w = self.block
-        return (f"v2|nbr={self.n_block_rows}|nbc={self.n_block_cols}"
+        return (f"v3|nbr={self.n_block_rows}|nbc={self.n_block_cols}"
                 f"|b={h}x{w}|nnzb={self.nnzb}|pad={self.pad_bucket}"
                 f"|skew={self.skew_bucket}|n={self.n_bucket}"
-                f"|ro={self.reorder}")
+                f"|ro={self.reorder}|ns={self.n_shards}")
 
 
 def _make_fingerprint(nbr: int, nbc: int, block, nnzb: int,
                       pad_pct: int, cv_pct: int, n: int,
-                      reorder: str = "identity") -> Fingerprint:
+                      reorder: str = "identity",
+                      n_shards: int = 1) -> Fingerprint:
     """Single bucketing site for both fingerprint paths — the meta-side and
     BCSR-side keys must agree bit-for-bit or cached picks stop matching."""
     return Fingerprint(
         n_block_rows=nbr, n_block_cols=nbc, block=tuple(block), nnzb=nnzb,
         pad_bucket=pad_pct // 10, skew_bucket=cv_pct // 25,
-        n_bucket=_pow2_bucket(n), reorder=reorder)
+        n_bucket=_pow2_bucket(n), reorder=reorder, n_shards=n_shards)
 
 
 def fingerprint(meta: ops.SparseMeta, n: int) -> Fingerprint:
-    """Fingerprint from the static meta ``prepare_sparse`` built."""
+    """Fingerprint from the static meta ``prepare_sparse`` built (or a
+    per-shard meta from ``dist_spmm.prepare_sharded`` — its ``n_shards``
+    rides into the v3 key)."""
     return _make_fingerprint(meta.n_block_rows, meta.n_block_cols,
                              meta.block, meta.nnzb,
                              meta.padding_ratio_pct, meta.bpr_cv_pct, n,
-                             reorder=meta.reorder)
+                             reorder=meta.reorder, n_shards=meta.n_shards)
 
 
 def fingerprint_bcsr(a: bcsr_lib.BCSR, n: int,

@@ -79,6 +79,11 @@ class SparseMeta:
     reorder: str = "identity"       # row-permutation scheme baked into vals
                                     # (autotune fingerprints on it: permuted
                                     # matrices have different bpr skew)
+    n_shards: int = 1               # 1 = whole matrix; >1 = this meta is one
+                                    # shard of a row-partitioned operand
+                                    # (launch.dist_spmm) — fingerprinted so
+                                    # per-shard picks never alias the
+                                    # unsharded twin's cache entries
 
 
 # accepted aliases -> canonical SpmmConfig.backend strings

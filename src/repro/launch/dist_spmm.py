@@ -1,0 +1,550 @@
+"""Sharded SpMM execution: row-partitioned BCSR over a device mesh.
+
+SMaT's single-device wins only reach the serving north star if the SpMM
+scales past one chip.  This module turns the reorder pipeline's dormant
+``shard_balance`` scheme into a working scaling axis:
+
+  * ``prepare_sharded`` partitions a host BCSR over block-rows (1D) using
+    the capacitated LPT bin assignment from ``core.permute.shard_bins``:
+    every shard owns exactly ``rows_per_shard`` block-row slots (trailing
+    slots virtual/empty) and a fixed ``nnzb_per_shard`` entry budget, so
+    the per-shard schedules are STATIC — scan/jit shapes never depend on
+    which shard a block landed in.  Per-shard nonzero-block loads come out
+    near-equal (the paper's mip1 observation, lifted from warps to
+    devices; Acc-SpMM makes the same point for TC pipelines).
+  * ``spmm_sharded`` executes the partition either as a ``shard_map`` over
+    a dedicated mesh axis (real multi-device execution; the column split
+    over B adds an optional 2D axis) or as an in-process "local" loop with
+    identical math (the fallback when no compatible mesh exists — unit
+    tests, single-chip serving).  Each shard resolves its OWN kernel
+    variant through ``ops.resolve_backend``: per-shard metas carry
+    ``n_shards`` into the v3 autotune fingerprint, and shards whose picks
+    differ dispatch through a ``lax.switch`` on the mesh axis index.
+  * Results gather back to ORIGINAL row order (``gather_rows`` composes
+    the optional pre-reorder with the partition permutation), so the
+    sharding — like the PR 2 reorder — never leaks to callers; gradients
+    flow through the inner per-shard ``ops.spmm`` custom VJP, the
+    ``shard_map`` transpose (partial dB psums across shards), and the
+    outer gather's transpose (padding rows receive exact zeros).
+
+Wired end-to-end via ``SparsitySpec(shards=...)`` -> ``init_sparse_linear``
+-> ``apply_sparse_linear`` (which reads the ambient mesh from
+``use_spmm_mesh``) -> the serve engine's decode path; ``launch.dryrun``
+reports the per-shard nnzb balance of sparse layers.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.sharding import PartitionSpec as P
+
+try:  # moved to the public namespace on newer JAX
+    from jax.experimental.shard_map import shard_map as _shard_map
+except ImportError:  # pragma: no cover - newer JAX
+    _shard_map = jax.shard_map
+
+from repro.core import bcsr as bcsr_lib
+from repro.core import permute as permute_lib
+from repro.kernels import ops
+from repro.launch import mesh as mesh_lib
+
+AXIS_ROW = "spmm"        # mesh axis the block-row partition maps onto
+AXIS_COL = "spmm_col"    # optional 2D axis: column split over B
+
+
+# ---------------------------------------------------------------------- types
+class ShardedArrays(NamedTuple):
+    """Device arrays of a row-partitioned BCSR operand (pytree leaves).
+
+    ``vals`` stays the FLAT global entry list — the single trainable leaf,
+    shaped exactly like the unsharded operand's so parameter trees,
+    optimizers, and sharding rules are unchanged.  The per-shard leaves
+    are index structure only (leading axis = shard):
+
+      src_index  [S, nnzb_ps]    entry index into vals (nnzb = zero sentinel)
+      row_ids    [S, nnzb_ps]    LOCAL block-row ids, sorted row-major
+      col_ids    [S, nnzb_ps]    global block-col ids
+      real_mask  [S, nnzb_ps]    False for sentinel/padding entries
+      t_perm     [S, nnzb_t_ps]  local transpose gather (nnzb_ps = sentinel)
+      t_row_ids  [S, nnzb_t_ps]  block-rows of the local A^T (= global bcols)
+      t_col_ids  [S, nnzb_t_ps]  LOCAL block-rows of A
+      gather_rows [M]            original row -> row of the stacked shard
+                                 outputs (composes pre-reorder + partition)
+    """
+    vals: jnp.ndarray
+    src_index: jnp.ndarray
+    row_ids: jnp.ndarray
+    col_ids: jnp.ndarray
+    real_mask: jnp.ndarray
+    t_perm: jnp.ndarray
+    t_row_ids: jnp.ndarray
+    t_col_ids: jnp.ndarray
+    gather_rows: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedMeta:
+    """Static (hashable) metadata of a sharded operand.
+
+    ``shard_metas[s]`` is a full per-shard ``SparseMeta`` (shape
+    ``(rows_per_shard*h, K)``, ``nnzb = nnzb_per_shard``, its own
+    max_bpr/padding/skew stats, ``n_shards`` set) — the fingerprint the
+    autotuner picks each shard's kernel variant from."""
+    shape: Tuple[int, int]              # logical global (M, K)
+    block: Tuple[int, int]
+    n_shards: int
+    col_shards: int
+    rows_per_shard: int                 # block-row slots per shard
+    nnzb: int                           # global flat entry count (vals leaf)
+    nnzb_per_shard: int
+    nnzb_t_per_shard: int
+    shard_metas: Tuple[ops.SparseMeta, ...]
+    reorder: str = "identity"           # pre-partition scheme (reporting)
+
+
+# ------------------------------------------------------------- ambient mesh
+_MESH_STACK: list = [None]
+
+
+@contextlib.contextmanager
+def use_spmm_mesh(mesh):
+    """Route ``apply_sparse_linear``'s sharded path through ``mesh`` for the
+    duration (trace-time setting: the mesh is baked into the jitted program
+    traced inside).  ``mesh=None`` is a no-op passthrough."""
+    _MESH_STACK.append(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH_STACK.pop()
+
+
+def current_spmm_mesh():
+    return _MESH_STACK[-1]
+
+
+def make_spmm_mesh(n_shards: int, col_shards: int = 1):
+    """Dedicated (n_shards,) or (n_shards, col_shards) mesh over the first
+    local devices, axes ``(AXIS_ROW[, AXIS_COL])``."""
+    need = n_shards * col_shards
+    if jax.device_count() < need:
+        raise ValueError(
+            f"spmm mesh needs {need} devices, have {jax.device_count()} "
+            "(CPU testing: XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    if col_shards > 1:
+        return mesh_lib.make_mesh((n_shards, col_shards), (AXIS_ROW, AXIS_COL))
+    return mesh_lib.make_mesh((n_shards,), (AXIS_ROW,))
+
+
+# ----------------------------------------------------------------- planning
+def plan_shards(a_p: bcsr_lib.BCSR, n_shards: int, *,
+                rows_per_shard: Optional[int] = None,
+                nnzb_per_shard: Optional[int] = None):
+    """Balanced block-row partition of a (row-padded) BCSR.
+
+    Returns ``(assign, shard_rows, loads, rps)``: the LPT bin assignment
+    (``core.permute.shard_bins``), per-shard sorted block-row lists, the
+    per-shard nonzero-block loads, and the (resolved) row-slot count."""
+    nbr = a_p.n_block_rows
+    rps = rows_per_shard or -(-max(nbr, 1) // n_shards)
+    bpr = np.diff(a_p.rowptr)
+    max_load = nnzb_per_shard
+    if max_load is not None:
+        # every virtual (unassigned) row slot costs one sentinel entry on
+        # whichever shard it lands; reserve the worst case up front so the
+        # LPT never fills headroom the sentinels need — an assignment that
+        # passes here is GUARANTEED to fit the real+virtual budget check
+        v_max = min(max(n_shards * rps - nbr, 0), rps)
+        max_load = max_load - v_max
+    assign = permute_lib.shard_bins(
+        bpr, n_shards, rows_per_shard=rps, max_load=max_load)
+    shard_rows = [np.flatnonzero(assign == s) for s in range(n_shards)]
+    loads = np.asarray([int(bpr[r].sum()) for r in shard_rows], np.int64)
+    return assign, shard_rows, loads, rps
+
+
+def _local_stats(rows: np.ndarray, vals_real: np.ndarray, rps: int,
+                 nnzb_ps: int, block) -> Tuple[int, int, int]:
+    """(max_bpr, pad_pct, cv_pct) of one shard's padded local structure."""
+    h, w = block
+    bpr = np.bincount(rows, minlength=rps).astype(np.float64)
+    mean = float(bpr.mean()) if bpr.size else 0.0
+    cv = float(bpr.std() / mean) if mean > 0 else 0.0
+    nnz = int(np.count_nonzero(vals_real))
+    pad = 1.0 - nnz / max(nnzb_ps * h * w, 1)
+    return (int(bpr.max()) if bpr.size else 0, int(round(pad * 100)),
+            int(round(cv * 100)))
+
+
+def prepare_sharded(a: bcsr_lib.BCSR, n_shards: int, *,
+                    col_shards: int = 1, dtype=jnp.bfloat16,
+                    reorder: str = "identity", tau: float = 0.7,
+                    max_candidates: Optional[int] = None,
+                    rows_per_shard: Optional[int] = None,
+                    nnzb_per_shard: Optional[int] = None
+                    ) -> Tuple[ShardedArrays, ShardedMeta]:
+    """Host BCSR -> row-partitioned device arrays + static sharded meta.
+
+    ``reorder`` optionally applies a block-row permutation scheme FIRST
+    (``jaccard`` | ``rcm`` — densify, then balance); the partition itself
+    is the ``shard_balance`` assignment, so passing ``"shard_balance"`` or
+    ``"identity"`` skips the pre-permutation.  ``rows_per_shard`` /
+    ``nnzb_per_shard`` pin the per-shard static shapes (the model-weight
+    path derives them from dims so scan-stacked layers agree); omitted,
+    they are derived from the structure (tight fit).  Raises when the
+    structure cannot fit the pinned budget — static shapes are a contract,
+    not a best effort."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    h, w = a.block
+    M, K = a.shape
+    pre_perm = np.arange(M, dtype=np.int64)
+    if reorder not in ("identity", "shard_balance"):
+        a, pre_perm = permute_lib.permute_bcsr(
+            a, reorder, tau=tau, max_candidates=max_candidates,
+            n_shards=n_shards, granularity="block_row")
+    a_p, real_g = a.ensure_nonempty_rows(return_mask=True)
+    nbr, nbc = a_p.n_block_rows, a_p.n_block_cols
+
+    assign, shard_rows, loads, rps = plan_shards(
+        a_p, n_shards, rows_per_shard=rows_per_shard,
+        nnzb_per_shard=nnzb_per_shard)
+    if rps * n_shards < nbr:
+        raise ValueError(f"rows_per_shard={rps} too small for {nbr} "
+                         f"block-rows over {n_shards} shards")
+
+    # per-shard entry lists (entries stay in a_p's global order; local ids
+    # relabel block-rows to each shard's slot space)
+    rowptr = a_p.rowptr
+    needed = []
+    per_shard = []
+    for s in range(n_shards):
+        rows_s = shard_rows[s]
+        ent = np.concatenate(
+            [np.arange(rowptr[r], rowptr[r + 1]) for r in rows_s]
+        ).astype(np.int64) if rows_s.size else np.zeros(0, np.int64)
+        lrow = np.repeat(np.arange(rows_s.size),
+                         np.diff(rowptr)[rows_s]) if rows_s.size \
+            else np.zeros(0, np.int64)
+        n_virtual = rps - rows_s.size
+        needed.append(ent.size + n_virtual)
+        per_shard.append((rows_s, ent, lrow, n_virtual))
+    nnzb_ps = nnzb_per_shard or max(needed)
+    too_big = [s for s in range(n_shards) if needed[s] > nnzb_ps]
+    if too_big:
+        raise ValueError(
+            f"shard(s) {too_big} need {[needed[s] for s in too_big]} entry "
+            f"slots but the per-shard budget is {nnzb_ps}; raise "
+            f"nnzb_per_shard or lower n_shards")
+    nnzb_t_ps = nnzb_ps + nbc
+    nnzb_g = a_p.nnzb
+    sentinel = nnzb_g            # extra zero row appended to vals at apply
+
+    src = np.full((n_shards, nnzb_ps), sentinel, np.int32)
+    rows = np.zeros((n_shards, nnzb_ps), np.int32)
+    cols = np.zeros((n_shards, nnzb_ps), np.int32)
+    mask = np.zeros((n_shards, nnzb_ps), bool)
+    t_perm = np.zeros((n_shards, nnzb_t_ps), np.int32)
+    t_rows = np.zeros((n_shards, nnzb_t_ps), np.int32)
+    t_cols = np.zeros((n_shards, nnzb_t_ps), np.int32)
+    metas = []
+    for s, (rows_s, ent, lrow, n_virtual) in enumerate(per_shard):
+        n_real = ent.size
+        # one sentinel per virtual row keeps the nnz-stream kernel's
+        # every-block-row-nonempty invariant; leftover budget pads row 0
+        vrows = np.arange(rows_s.size, rps)
+        l_rows = np.concatenate([
+            lrow, vrows, np.zeros(nnzb_ps - n_real - n_virtual, np.int64)])
+        l_cols = np.concatenate([
+            a_p.col_ids[ent].astype(np.int64),
+            np.zeros(nnzb_ps - n_real, np.int64)])
+        l_src = np.concatenate([
+            ent, np.full(nnzb_ps - n_real, sentinel, np.int64)])
+        l_mask = np.concatenate([
+            real_g[ent], np.zeros(nnzb_ps - n_real, bool)])
+        order = np.lexsort((l_cols, l_rows))
+        rows[s] = l_rows[order]
+        cols[s] = l_cols[order]
+        src[s] = l_src[order]
+        mask[s] = l_mask[order]
+        # transpose structure: every local slot (sentinels hold zero blocks,
+        # harmless) + one t-sentinel per t-block-row for full coverage —
+        # the count is nnzb_ps + nbc by construction, shape-deterministic
+        tt_rows = np.concatenate([cols[s].astype(np.int64),
+                                  np.arange(nbc, dtype=np.int64)])
+        tt_cols = np.concatenate([rows[s].astype(np.int64),
+                                  np.zeros(nbc, np.int64)])
+        tt_perm = np.concatenate([np.arange(nnzb_ps, dtype=np.int64),
+                                  np.full(nbc, nnzb_ps, np.int64)])
+        t_order = np.lexsort((tt_cols, tt_rows))
+        t_rows[s] = tt_rows[t_order]
+        t_cols[s] = tt_cols[t_order]
+        t_perm[s] = tt_perm[t_order]
+        max_bpr, pad_pct, cv_pct = _local_stats(
+            rows[s], a_p.vals[ent], rps, nnzb_ps, (h, w))
+        metas.append(ops.SparseMeta(
+            shape=(rps * h, K), block=(h, w), n_block_rows=rps,
+            n_block_cols=nbc, nnzb=nnzb_ps, nnzb_t=nnzb_t_ps,
+            max_bpr=max_bpr, padding_ratio_pct=pad_pct, bpr_cv_pct=cv_pct,
+            reorder="identity", n_shards=n_shards))
+
+    # original row -> stacked output row: pre-reorder, then partition slot
+    inv_pre = permute_lib.invert_perm(pre_perm)
+    slot_of_br = np.empty(nbr, np.int64)
+    for s in range(n_shards):
+        slot_of_br[shard_rows[s]] = s * rps + np.arange(shard_rows[s].size)
+    perm_rows = inv_pre                       # position after pre-reorder
+    gather = slot_of_br[perm_rows // h] * h + perm_rows % h
+
+    arrays = ShardedArrays(
+        vals=jnp.asarray(a_p.vals, dtype=dtype),
+        src_index=jnp.asarray(src, jnp.int32),
+        row_ids=jnp.asarray(rows, jnp.int32),
+        col_ids=jnp.asarray(cols, jnp.int32),
+        real_mask=jnp.asarray(mask),
+        t_perm=jnp.asarray(t_perm, jnp.int32),
+        t_row_ids=jnp.asarray(t_rows, jnp.int32),
+        t_col_ids=jnp.asarray(t_cols, jnp.int32),
+        gather_rows=jnp.asarray(gather, jnp.int32),
+    )
+    meta = ShardedMeta(shape=(M, K), block=(h, w), n_shards=n_shards,
+                       col_shards=col_shards, rows_per_shard=rps,
+                       nnzb=nnzb_g, nnzb_per_shard=nnzb_ps,
+                       nnzb_t_per_shard=nnzb_t_ps, shard_metas=tuple(metas),
+                       reorder=reorder)
+    return arrays, meta
+
+
+# ---------------------------------------------------------------- execution
+def _resolve_shard_choices(smeta: ShardedMeta, n_local: int, backend: str,
+                           bn: int) -> Tuple[Tuple[str, int], ...]:
+    """Per-shard (backend, bn): ``auto`` consults the v3 per-shard
+    fingerprints, so a skewed shard can run ``row_loop`` while its uniform
+    neighbors stream nonzeros — the per-structure choice the global
+    dispatch could not make.  ``n_local`` is the panel width each shard
+    ACTUALLY multiplies (full N in local mode; N / col_shards under the 2D
+    shard_map) so cached picks come from the right N bucket."""
+    return tuple(ops.resolve_backend(backend, bn, m, n_local)
+                 for m in smeta.shard_metas)
+
+
+def _branch_meta(smeta: ShardedMeta, members) -> ops.SparseMeta:
+    """Representative meta for one switch branch: shapes are shared by
+    construction; max_bpr takes the branch max so a row_loop schedule
+    covers every member shard."""
+    first = smeta.shard_metas[members[0]]
+    return dataclasses.replace(
+        first, max_bpr=max(smeta.shard_metas[i].max_bpr for i in members))
+
+
+def spmm_sharded(arrays: ShardedArrays, smeta: ShardedMeta, b: jnp.ndarray,
+                 *, backend: str = "auto", bn: int = 512,
+                 interpret: bool = False, mesh=None,
+                 out_dtype=None) -> jnp.ndarray:
+    """C = A @ B over the row-partitioned operand, original row order.
+
+    ``mesh=None`` runs the identical per-shard schedule in-process (the
+    single-device fallback); a mesh with an ``AXIS_ROW`` axis of size
+    ``n_shards`` (and ``AXIS_COL`` of size ``col_shards`` when 2D) runs it
+    as a ``shard_map``.  Differentiable w.r.t. ``arrays.vals`` and ``b``
+    through the per-shard custom VJPs; partial dB contributions psum
+    across row shards via the shard_map transpose."""
+    M, K = smeta.shape
+    N = int(b.shape[-1])
+    S = smeta.n_shards
+
+    zero = jnp.zeros((1,) + tuple(arrays.vals.shape[1:]), arrays.vals.dtype)
+    vals_ext = jnp.concatenate([arrays.vals, zero], axis=0)
+
+    if mesh is None:
+        # local mode multiplies the FULL panel per shard — resolve picks
+        # for N, not N / col_shards
+        choices = _resolve_shard_choices(smeta, N, backend, bn)
+        outs = []
+        for s in range(S):
+            arr = ops.SparseArrays(
+                jnp.take(vals_ext, arrays.src_index[s], axis=0),
+                arrays.row_ids[s], arrays.col_ids[s],
+                arrays.real_mask[s], arrays.t_perm[s], arrays.t_row_ids[s],
+                arrays.t_col_ids[s])
+            be, bn_s = choices[s]
+            outs.append(ops.spmm(arr, smeta.shard_metas[s], b, backend=be,
+                                 bn=bn_s, interpret=interpret,
+                                 out_dtype=out_dtype))
+        out_pad = jnp.concatenate(outs, axis=0)
+        return jnp.take(out_pad, arrays.gather_rows, axis=0)
+
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if axis_sizes.get(AXIS_ROW) != S:
+        raise ValueError(
+            f"mesh axis {AXIS_ROW!r} must have size {S} "
+            f"(got {axis_sizes.get(AXIS_ROW)}); build one with "
+            "dist_spmm.make_spmm_mesh")
+    C = smeta.col_shards
+    if C > 1 and axis_sizes.get(AXIS_COL) != C:
+        raise ValueError(
+            f"mesh axis {AXIS_COL!r} must have size {C} "
+            f"(got {axis_sizes.get(AXIS_COL)})")
+    choices = _resolve_shard_choices(smeta, -(-N // C), backend, bn)
+
+    n_pad = (-N) % C
+    b_p = jnp.pad(b, ((0, 0), (0, n_pad))) if n_pad else b
+
+    keys = list(dict.fromkeys(choices))
+    branch_of = [keys.index(c) for c in choices]
+    branch_metas = [
+        _branch_meta(smeta, [i for i in range(S) if branch_of[i] == k])
+        for k in range(len(keys))]
+
+    def _branch(k):
+        be, bn_k = keys[k]
+        meta_k = branch_metas[k]
+
+        def run(sv, ri, ci, rm, tp, tr, tc, bloc):
+            arr = ops.SparseArrays(sv, ri, ci, rm, tp, tr, tc)
+            return ops.spmm(arr, meta_k, bloc, backend=be, bn=bn_k,
+                            interpret=interpret, out_dtype=out_dtype)
+        return run
+
+    def body(ve, si, ri, ci, rm, tp, tr, tc, bloc):
+        # the per-shard weight gather happens HERE, on the local slice of
+        # src_index against the replicated flat vals — no device ever
+        # materializes the full [S, nnzb_ps, h, w] stack
+        sv = jnp.take(ve, si[0], axis=0)
+        operands = (sv, ri[0], ci[0], rm[0], tp[0], tr[0], tc[0], bloc)
+        if len(keys) == 1:
+            return _branch(0)(*operands)
+        idx = jax.lax.axis_index(AXIS_ROW)
+        sel = jnp.asarray(branch_of, jnp.int32)[idx]
+        return jax.lax.switch(sel, [_branch(k) for k in range(len(keys))],
+                              *operands)
+
+    shard_spec = P(AXIS_ROW)
+    b_spec = P(None, AXIS_COL) if C > 1 else P()
+    out_spec = P(AXIS_ROW, AXIS_COL) if C > 1 else P(AXIS_ROW)
+    f = _shard_map(body, mesh=mesh,
+                   in_specs=(P(),) + (shard_spec,) * 7 + (b_spec,),
+                   out_specs=out_spec, check_rep=False)
+    out_pad = f(vals_ext, arrays.src_index, arrays.row_ids, arrays.col_ids,
+                arrays.real_mask, arrays.t_perm, arrays.t_row_ids,
+                arrays.t_col_ids, b_p)
+    # padding rows are dropped by the gather; its transpose scatters exact
+    # zeros back into them, so grads match the unsharded path bit-for-bit
+    # on the real support
+    return jnp.take(out_pad, arrays.gather_rows, axis=0)[:, :N]
+
+
+# ------------------------------------------------------------------- tuning
+def tune_shards(arrays: ShardedArrays, smeta: ShardedMeta, n: int, *,
+                interpret: bool = True, warmup: int = 1, iters: int = 3,
+                rng_seed: int = 0, tuner=None) -> dict:
+    """Timed per-shard micro-sweep (the sharded analogue of
+    ``Autotuner.tune``): times every registered candidate on each shard's
+    LOCAL slice and caches the winner under the shard's v3 fingerprint,
+    so later ``backend="auto"`` dispatch picks measured winners per shard.
+    Shards whose fingerprints coincide (well-balanced partitions — the
+    common case) are timed once.  Returns {fingerprint_key: choice}."""
+    import time
+
+    from repro.kernels import autotune
+    tuner = tuner or autotune.get_autotuner()
+    rng = np.random.default_rng(rng_seed)
+    b = jnp.asarray(rng.standard_normal((smeta.shape[1], n)),
+                    dtype=jnp.float32)
+    zero = jnp.zeros((1,) + tuple(arrays.vals.shape[1:]), arrays.vals.dtype)
+    vals_ext = jnp.concatenate([arrays.vals, zero], axis=0)
+
+    tuned: dict = {}
+    for s, meta_s in enumerate(smeta.shard_metas):
+        fp = autotune.fingerprint(meta_s, n)
+        if fp.key() in tuned:
+            continue
+        arr = ops.SparseArrays(
+            jnp.take(vals_ext, arrays.src_index[s], axis=0),
+            arrays.row_ids[s], arrays.col_ids[s], arrays.real_mask[s],
+            arrays.t_perm[s], arrays.t_row_ids[s], arrays.t_col_ids[s])
+        cand = {}
+        for name in autotune.variant_names():
+            v = autotune.get_variant(name)
+            if not v.supported(meta_s):
+                continue
+            bns = {autotune.pick_bn(meta_s, n, v.bn_candidates)}
+            bns.update(bn for bn in v.bn_candidates if bn <= max(n, 128))
+            for bn in sorted(bns):
+                cand[f"{name}/bn{bn}"] = (name, bn)
+        cand.setdefault(
+            f"{autotune.DEFAULT_VARIANT}/bn{autotune.DEFAULT_BN}",
+            (autotune.DEFAULT_VARIANT, autotune.DEFAULT_BN))
+        timings = {}
+        for label, (name, bn) in cand.items():
+            backend = autotune.get_variant(name).backend
+            fn = jax.jit(lambda bb, _be=backend, _bn=bn: ops.spmm(
+                arr, meta_s, bb, backend=_be, bn=_bn, interpret=interpret))
+            try:
+                jax.block_until_ready(fn(b))
+                for _ in range(max(warmup - 1, 0)):
+                    jax.block_until_ready(fn(b))
+                ts = []
+                for _ in range(iters):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(fn(b))
+                    ts.append(time.perf_counter() - t0)
+                timings[label] = float(np.median(ts))
+            except Exception:   # variant not runnable here — skip, not die
+                continue
+        default_label = f"{autotune.DEFAULT_VARIANT}/bn{autotune.DEFAULT_BN}"
+        if not timings:
+            choice = autotune.default_choice()
+        else:
+            best = min(timings, key=timings.get)
+            if (default_label in timings and
+                    timings[default_label] <= timings[best] * 1.02):
+                best = default_label          # default wins ties (noise)
+            name, bn = cand[best]
+            choice = autotune.KernelChoice(name, bn, source="measured",
+                                           predicted_us=timings[best] * 1e6)
+        tuner.put(fp, choice, persist=True)
+        tuned[fp.key()] = choice
+    return tuned
+
+
+# ---------------------------------------------------------------- reporting
+def shard_balance_stats(a: bcsr_lib.BCSR, n_shards: int, *,
+                        rows_per_shard: Optional[int] = None) -> dict:
+    """Host-side per-shard nnzb balance report (dry-run / benchmarks).
+
+    ``imbalance`` is max/mean per-shard load (1.0 = perfect);
+    ``contig_imbalance`` is the same for a naive contiguous equal-row
+    split — the balance the LPT assignment buys vs doing nothing."""
+    a_p = a.ensure_nonempty_rows()
+    _, _, loads, rps = plan_shards(a_p, n_shards,
+                                   rows_per_shard=rows_per_shard)
+    bpr = np.diff(a_p.rowptr)
+    nbr = bpr.size
+    contig = np.asarray(
+        [int(bpr[s * rps: (s + 1) * rps].sum()) for s in range(n_shards)],
+        np.int64)
+    mean = float(loads.mean()) if n_shards else 0.0
+
+    def imb(x):
+        m = float(x.mean())
+        return round(float(x.max()) / m, 4) if m > 0 else 1.0
+
+    return {
+        "n_shards": int(n_shards),
+        "n_block_rows": int(nbr),
+        "rows_per_shard": int(rps),
+        "nnzb": int(a_p.nnzb),
+        "loads": [int(x) for x in loads],
+        "load_mean": round(mean, 2),
+        "load_max": int(loads.max()) if n_shards else 0,
+        "imbalance": imb(loads),
+        "contig_imbalance": imb(contig),
+        "load_cv_pct": int(round(100 * float(loads.std()) / mean))
+        if mean > 0 else 0,
+    }

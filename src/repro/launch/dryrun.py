@@ -213,6 +213,20 @@ def run_cell(cfg, shape: ShapeCell, mesh, *, remat: str = "full",
     return rec
 
 
+def sparse_shard_report(cfg) -> dict:
+    """Per-shard nnzb balance of the arch's partitioned sparse FFN
+    (``SparsitySpec(shards=...)``) — empty when the arch has none.  Printed
+    per arch so the LPT partition quality is visible before any launch."""
+    spec = cfg.ffn_sparsity
+    if spec is None or getattr(spec, "shards", 0) < 1:
+        return {}
+    from repro.core import sparse_linear as sl
+    return {
+        "gate_up": sl.shard_balance_report(cfg.d_model, cfg.d_ff, spec),
+        "down": sl.shard_balance_report(cfg.d_ff, cfg.d_model, spec),
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -245,6 +259,15 @@ def main(argv=None):
     records = []
     for a in archs:
         cfg = get_config(a)
+        shard_rep = sparse_shard_report(cfg)
+        if shard_rep:
+            for lname, r in shard_rep.items():
+                print(f"[dryrun] {cfg.name} sparse shard balance [{lname}]: "
+                      f"{r['n_shards']} shards, nnzb loads {r['loads']} "
+                      f"(imbalance {r['imbalance']}x vs contiguous "
+                      f"{r['contig_imbalance']}x)")
+            records.append({"arch": cfg.name, "status": "sparse_shards",
+                            "sparse_shards": shard_rep})
         for s in shapes:
             cell = SHAPES[s]
             if args.batch or args.seq:

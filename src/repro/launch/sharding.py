@@ -63,6 +63,14 @@ _PARAM_RULES = {
     # reorder permutation leaves (core.permute): replicated like the other
     # index arrays — every chip un-permutes its own token panel's output
     "row_perm": P(None), "inv_perm": P(None),
+    # partitioned-execution leaves (launch.dist_spmm, SparsitySpec.shards):
+    # replicated index structure — the row-shard axis lives in the
+    # dedicated spmm mesh consumed by shard_map (use_spmm_mesh), not in
+    # the training mesh, and the shapes are tiny (int32 index lists)
+    "shard_src": P(None, None), "shard_row_ids": P(None, None),
+    "shard_col_ids": P(None, None), "shard_mask": P(None, None),
+    "shard_t_perm": P(None, None), "shard_t_row_ids": P(None, None),
+    "shard_t_col_ids": P(None, None), "gather_rows": P(None),
 }
 
 _MOE_EXPERT_LEAVES = {"w_gate", "w_up", "w_down"}  # [E, D, F] under "moe"

@@ -60,12 +60,19 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
-                 cache_len: int = 256, mesh=None, seed: int = 0):
+                 cache_len: int = 256, mesh=None, seed: int = 0,
+                 spmm_mesh=None):
+        """``spmm_mesh``: optional dedicated mesh for the partitioned
+        sparse-FFN path (``SparsitySpec(shards=...)``).  When set, decode
+        traces run under ``dist_spmm.use_spmm_mesh`` so every sparse layer
+        executes as a shard_map over it; when None, sharded layers fall
+        back to the in-process equivalent (identical math)."""
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.cache_len = cache_len
         self.key = jax.random.PRNGKey(seed)
+        self.spmm_mesh = spmm_mesh
 
         def _masked_step(p, c, t, pos, slot_mask):
             logits, new_c = T.decode_step(cfg, p, c, t, pos)
@@ -73,7 +80,19 @@ class ServeEngine:
             # inside the same traced computation
             return logits, _merge_cache(c, new_c, slot_mask)
 
-        self._decode = jax.jit(_masked_step, donate_argnums=(1,))
+        _decode_jit = jax.jit(_masked_step, donate_argnums=(1,))
+
+        def _decode(*args):
+            if self.spmm_mesh is None:
+                return _decode_jit(*args)
+            # the mesh is read at trace time; the first call after setting
+            # it bakes it into the jitted program (later calls hit the
+            # cache untouched — change the mesh BEFORE the first step)
+            from repro.launch import dist_spmm  # local: layering
+            with dist_spmm.use_spmm_mesh(self.spmm_mesh):
+                return _decode_jit(*args)
+
+        self._decode = _decode
         self.cache = T.init_cache(cfg, n_slots, cache_len)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, np.int32)

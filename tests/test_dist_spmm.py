@@ -1,0 +1,386 @@
+"""Sharded SpMM execution tests (``launch.dist_spmm``).
+
+Equivalence vs the single-device reference across shard counts {1, 2, 4, 8}
+— forward within dtype tolerance and the VJP (dvals on the real support,
+dB) — including ragged block-row counts, a partial trailing block-row, and
+empty shards; plus the shard_bins occupancy invariants, the v3 autotune
+fingerprint, the mixed-variant lax.switch path, and the model wiring
+(``SparsitySpec(shards=...)``).
+
+shard_map cases need real devices: run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
+``test-multidevice`` job does); on fewer devices they skip, the local-mode
+equivalences still run.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bcsr as bcsr_lib
+from repro.core import permute, topology
+from repro.core.sparse_linear import (SparsitySpec, apply_sparse_linear,
+                                      init_sparse_linear,
+                                      sparse_linear_specs)
+from repro.kernels import autotune, ops
+from repro.launch import dist_spmm
+
+SHARD_COUNTS = (1, 2, 4, 8)
+
+
+def _cases():
+    """(name, BCSR) — ragged row count + partial trailing block-row, skewed
+    power-law (empty element rows), and a clustered structure."""
+    return [
+        ("ragged_partial", bcsr_lib.random_bcsr(0, (23 * 16 + 5, 160),
+                                                (16, 16), 0.3)),
+        ("power_law_skew", bcsr_lib.from_scipy(
+            topology.power_law(500, 5.0, seed=2), (16, 16))),
+        ("clustered", bcsr_lib.from_scipy(
+            topology.blocked_random(n=512, nnz_target=9000, cluster=16,
+                                    seed=1), (16, 16))),
+    ]
+
+
+def _ref(a, b):
+    arrays, meta = ops.prepare_sparse(a, dtype=jnp.float32)
+    return arrays, meta, ops.spmm(arrays, meta, b, backend="xla")
+
+
+def _b_for(a, n=48, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((a.shape[1], n)).astype(np.float32))
+
+
+# ------------------------------------------------------------ bin assignment
+def test_shard_bins_occupancy_invariants():
+    """Every block-row lands in exactly one bin, cardinality caps hold, and
+    the LPT loads beat (or match) a naive contiguous split on skew."""
+    a = bcsr_lib.from_scipy(topology.power_law(800, 6.0, seed=3), (16, 16))
+    a_p = a.ensure_nonempty_rows()
+    bpr = np.diff(a_p.rowptr)
+    for S in (2, 4, 8):
+        rps = -(-a_p.n_block_rows // S)
+        assign = permute.shard_bins(bpr, S, rows_per_shard=rps)
+        assert assign.shape == (a_p.n_block_rows,)
+        assert assign.min() >= 0 and assign.max() < S
+        counts = np.bincount(assign, minlength=S)
+        assert counts.max() <= rps
+        assert counts.sum() == a_p.n_block_rows
+        loads = np.asarray([bpr[assign == s].sum() for s in range(S)])
+        assert loads.sum() == a_p.nnzb
+        contig = np.asarray([bpr[s * rps:(s + 1) * rps].sum()
+                             for s in range(S)])
+        assert loads.max() <= contig.max()
+
+
+def test_shard_bins_capacity_raises():
+    with pytest.raises(ValueError, match="budget|capacity|cannot fit"):
+        permute.shard_bins(np.asarray([10, 10, 10, 10]), 2,
+                           rows_per_shard=2, max_load=12)
+
+
+def test_prepare_sharded_budget_raises():
+    a = bcsr_lib.random_bcsr(0, (128, 128), (16, 16), 0.5)
+    with pytest.raises(ValueError):
+        dist_spmm.prepare_sharded(a, 2, nnzb_per_shard=2)
+
+
+def test_shard_balance_stats_beats_contiguous():
+    a = bcsr_lib.from_scipy(topology.power_law(800, 6.0, seed=3), (16, 16))
+    st = dist_spmm.shard_balance_stats(a, 4)
+    assert st["imbalance"] <= st["contig_imbalance"] + 1e-9
+    assert sum(st["loads"]) == st["nnzb"]
+
+
+# ------------------------------------------------------- local-mode equality
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_sharded_fwd_matches_reference(n_shards, backend):
+    for name, a in _cases():
+        b = _b_for(a)
+        _, _, ref = _ref(a, b)
+        sharr, smeta = dist_spmm.prepare_sharded(a, n_shards,
+                                                 dtype=jnp.float32)
+        out = dist_spmm.spmm_sharded(sharr, smeta, b, backend=backend,
+                                     interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-4, err_msg=name)
+
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+def test_sharded_grads_match_reference(n_shards):
+    """dvals bit-comparable on the shared flat entry order; dB within fp
+    tolerance (summation order differs across shards)."""
+    a = bcsr_lib.from_scipy(topology.power_law(500, 5.0, seed=2), (16, 16))
+    b = _b_for(a)
+    arrays, meta, _ = _ref(a, b)
+    sharr, smeta = dist_spmm.prepare_sharded(a, n_shards, dtype=jnp.float32)
+
+    def loss_sh(v, bb):
+        out = dist_spmm.spmm_sharded(sharr._replace(vals=v), smeta, bb,
+                                     backend="xla")
+        return jnp.sum(out ** 2)
+
+    def loss_ref(v, bb):
+        arr = ops.SparseArrays(v, *arrays[1:])
+        return jnp.sum(ops.spmm(arr, meta, bb, backend="xla") ** 2)
+
+    gv, gb = jax.grad(loss_sh, argnums=(0, 1))(sharr.vals, b)
+    rv, rb = jax.grad(loss_ref, argnums=(0, 1))(arrays.vals, b)
+    np.testing.assert_allclose(np.asarray(gv), np.asarray(rv),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(rb),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_empty_shards_more_shards_than_rows():
+    a = bcsr_lib.random_bcsr(1, (30, 64), (16, 16), 0.5)  # 2 block-rows
+    b = _b_for(a, n=8)
+    _, _, ref = _ref(a, b)
+    sharr, smeta = dist_spmm.prepare_sharded(a, 8, dtype=jnp.float32)
+    out = dist_spmm.spmm_sharded(sharr, smeta, b, backend="xla")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_pre_reorder_composes_with_partition():
+    """jaccard pre-permutation + partition: output still in ORIGINAL order."""
+    a = bcsr_lib.from_scipy(
+        topology.blocked_random(n=512, nnz_target=9000, cluster=16, seed=1),
+        (16, 16))
+    b = _b_for(a)
+    _, _, ref = _ref(a, b)
+    sharr, smeta = dist_spmm.prepare_sharded(a, 4, dtype=jnp.float32,
+                                             reorder="jaccard")
+    out = dist_spmm.spmm_sharded(sharr, smeta, b, backend="xla")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+# -------------------------------------------------------- fingerprint v3
+def test_fingerprint_v3_shard_count_no_alias():
+    a = bcsr_lib.random_bcsr(0, (256, 256), (16, 16), 0.2)
+    _, meta = ops.prepare_sparse(a, dtype=jnp.float32)
+    sharr, smeta = dist_spmm.prepare_sharded(a, 4, dtype=jnp.float32)
+    k_full = autotune.fingerprint(meta, 64).key()
+    k_shard = autotune.fingerprint(smeta.shard_metas[0], 64).key()
+    assert k_full.startswith("v3|") and k_shard.startswith("v3|")
+    assert "ns=1" in k_full and "ns=4" in k_shard
+    assert k_full != k_shard
+
+
+def test_tune_shards_caches_measured_picks():
+    """tune_shards (the SparsitySpec(tune_n=...) path for sharded layers)
+    must leave a measured entry under every shard fingerprint, and auto
+    dispatch must then match the reference."""
+    a = bcsr_lib.from_scipy(topology.power_law(400, 5.0, seed=2), (16, 16))
+    b = _b_for(a, n=32)
+    _, _, ref = _ref(a, b)
+    sharr, smeta = dist_spmm.prepare_sharded(a, 2, dtype=jnp.float32)
+    tuner = autotune.Autotuner()
+    old = autotune.get_autotuner()
+    autotune.set_autotuner(tuner)
+    try:
+        tuned = dist_spmm.tune_shards(sharr, smeta, 32, iters=1,
+                                      tuner=tuner)
+        for m in smeta.shard_metas:
+            hit = tuner.get(autotune.fingerprint(m, 32))
+            assert hit is not None and hit.source == "measured"
+        assert tuned
+        out = dist_spmm.spmm_sharded(sharr, smeta, b, backend="auto",
+                                     interpret=True)
+    finally:
+        autotune.set_autotuner(old)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_per_shard_auto_choices_resolve():
+    a = bcsr_lib.from_scipy(topology.power_law(500, 5.0, seed=2), (16, 16))
+    _, smeta = dist_spmm.prepare_sharded(a, 4, dtype=jnp.float32)
+    choices = dist_spmm._resolve_shard_choices(smeta, 64, "auto", 512)
+    assert len(choices) == 4
+    for be, bn in choices:
+        assert be in ops.BACKENDS and bn >= 1
+
+
+# --------------------------------------------------------- shard_map mode
+def _mesh_or_skip(n_shards, col_shards=1):
+    if jax.device_count() < n_shards * col_shards:
+        pytest.skip(f"needs {n_shards * col_shards} devices "
+                    f"(have {jax.device_count()}); run under "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    return dist_spmm.make_spmm_mesh(n_shards, col_shards)
+
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+def test_shard_map_matches_reference(n_shards):
+    mesh = _mesh_or_skip(n_shards)
+    for name, a in _cases():
+        b = _b_for(a)
+        _, _, ref = _ref(a, b)
+        sharr, smeta = dist_spmm.prepare_sharded(a, n_shards,
+                                                 dtype=jnp.float32)
+        out = jax.jit(lambda v, bb, _s=sharr, _m=smeta, _me=mesh:
+                      dist_spmm.spmm_sharded(_s._replace(vals=v), _m, bb,
+                                             backend="xla", mesh=_me)
+                      )(sharr.vals, b)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-4, err_msg=name)
+
+
+@pytest.mark.parametrize("n_shards", (2, 4, 8))
+def test_shard_map_grads_match_reference(n_shards):
+    mesh = _mesh_or_skip(n_shards)
+    a = bcsr_lib.from_scipy(topology.power_law(500, 5.0, seed=2), (16, 16))
+    b = _b_for(a)
+    arrays, meta, _ = _ref(a, b)
+    sharr, smeta = dist_spmm.prepare_sharded(a, n_shards, dtype=jnp.float32)
+
+    def loss_sh(v, bb):
+        out = dist_spmm.spmm_sharded(sharr._replace(vals=v), smeta, bb,
+                                     backend="pallas", interpret=True,
+                                     mesh=mesh)
+        return jnp.sum(out ** 2)
+
+    def loss_ref(v, bb):
+        arr = ops.SparseArrays(v, *arrays[1:])
+        return jnp.sum(ops.spmm(arr, meta, bb, backend="xla") ** 2)
+
+    gv, gb = jax.jit(jax.grad(loss_sh, argnums=(0, 1)))(sharr.vals, b)
+    rv, rb = jax.grad(loss_ref, argnums=(0, 1))(arrays.vals, b)
+    np.testing.assert_allclose(np.asarray(gv), np.asarray(rv),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(rb),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_shard_map_2d_col_split():
+    mesh = _mesh_or_skip(2, 2)
+    a = bcsr_lib.from_scipy(topology.power_law(500, 5.0, seed=2), (16, 16))
+    b = _b_for(a, n=50)          # N not divisible by col_shards: pads+trims
+    _, _, ref = _ref(a, b)
+    sharr, smeta = dist_spmm.prepare_sharded(a, 2, col_shards=2,
+                                             dtype=jnp.float32)
+    out = dist_spmm.spmm_sharded(sharr, smeta, b, backend="xla", mesh=mesh)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_mixed_variant_switch_dispatch():
+    """Shards with different structure stats get DIFFERENT cached picks:
+    the shard_map body must dispatch through lax.switch and still match
+    the reference.  A well-balanced partition yields identical per-shard
+    fingerprints (shared cache entry — by design), so this uses a skewed
+    structure whose LPT bins genuinely differ."""
+    mesh = _mesh_or_skip(2)
+    dense = np.zeros((64, 512), np.float32)
+    rng = np.random.default_rng(0)
+    dense[:16, :480] = rng.standard_normal((16, 480))      # heavy block-row
+    for r in range(1, 4):                                  # light rows
+        dense[16 * r, 16 * r] = 1.0
+    a = bcsr_lib.from_dense(dense, (16, 16))
+    b = _b_for(a)
+    _, _, ref = _ref(a, b)
+    sharr, smeta = dist_spmm.prepare_sharded(a, 2, dtype=jnp.float32)
+    fps = [autotune.fingerprint(m, 48).key() for m in smeta.shard_metas]
+    assert fps[0] != fps[1]                   # stats really diverge
+    tuner = autotune.Autotuner()
+    for m, (variant, bn) in zip(smeta.shard_metas,
+                                [("nnz_stream", 128), ("xla", 512)]):
+        tuner.put(autotune.fingerprint(m, 48), autotune.KernelChoice(
+            variant, bn, source="measured"), persist=False)
+    old = autotune.get_autotuner()
+    autotune.set_autotuner(tuner)
+    try:
+        choices = dist_spmm._resolve_shard_choices(smeta, 48, "auto", 512)
+        assert len(set(choices)) > 1          # really a multi-branch switch
+        out = dist_spmm.spmm_sharded(sharr, smeta, b, backend="auto",
+                                     interpret=True, mesh=mesh)
+    finally:
+        autotune.set_autotuner(old)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+# ------------------------------------------------------------- model wiring
+def _specs(shards=0):
+    base = dict(density=0.3, block=(16, 16), backend="xla")
+    return (SparsitySpec(**base),
+            SparsitySpec(**base, shards=shards) if shards else None)
+
+
+def test_sparse_linear_sharded_matches_unsharded():
+    spec0, specS = _specs(shards=4)
+    d, f = 96, 160
+    p0, m0 = init_sparse_linear(11, d, f, spec0, dtype=jnp.float32)
+    pS, mS = init_sparse_linear(11, d, f, specS, dtype=jnp.float32)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (2, 5, d)).astype(np.float32))
+    y0 = apply_sparse_linear(p0, m0, x, spec0)
+    yS = apply_sparse_linear(pS, mS, x, specS)
+    np.testing.assert_allclose(np.asarray(yS), np.asarray(y0),
+                               rtol=1e-5, atol=1e-4)
+
+    def loss(v, p, m, s):
+        return jnp.sum(apply_sparse_linear({**p, "vals": v}, m, x, s) ** 2)
+    gS = jax.grad(loss)(pS["vals"], pS, mS, specS)
+    g0 = jax.grad(loss)(p0["vals"], p0, m0, spec0)
+    np.testing.assert_allclose(np.asarray(gS), np.asarray(g0),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_sparse_linear_specs_match_init_shapes():
+    """The dims-only spec shapes are the contract that lets structures of
+    DIFFERENT seeds scan-stack; init must land exactly on them."""
+    _, specS = _specs(shards=4)
+    d, f = 96, 160
+    ps_specs, ms_specs = sparse_linear_specs(d, f, specS, dtype=jnp.float32)
+    for seed in (11, 12, 13):
+        pS, mS = init_sparse_linear(seed, d, f, specS, dtype=jnp.float32)
+        assert set(pS) == set(ps_specs)
+        for k in pS:
+            assert ps_specs[k].shape == pS[k].shape, k
+            assert ps_specs[k].dtype == pS[k].dtype, k
+        assert ms_specs.rows_per_shard == mS.rows_per_shard
+        assert ms_specs.nnzb_per_shard == mS.nnzb_per_shard
+
+
+def test_sparse_linear_sharded_under_mesh():
+    if jax.device_count() < 4:
+        pytest.skip("needs 4 devices")
+    spec0, specS = _specs(shards=4)
+    d, f = 96, 160
+    p0, m0 = init_sparse_linear(11, d, f, spec0, dtype=jnp.float32)
+    pS, mS = init_sparse_linear(11, d, f, specS, dtype=jnp.float32)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (2, 5, d)).astype(np.float32))
+    y0 = apply_sparse_linear(p0, m0, x, spec0)
+    mesh = dist_spmm.make_spmm_mesh(4)
+    with dist_spmm.use_spmm_mesh(mesh):
+        yS = jax.jit(lambda p, xx: apply_sparse_linear(p, mS, xx, specS)
+                     )(pS, x)
+    np.testing.assert_allclose(np.asarray(yS), np.asarray(y0),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_model_mlp_sharded_matches_dense_path():
+    """cfg.ffn_sparsity.shards wires through init_mlp/mlp unchanged."""
+    from repro.configs import get_config
+    from repro.models import layers as L
+    cfg0 = dataclasses.replace(get_config("smat-ffn-1.3b:smoke"),
+                               dtype="float32")
+    specS = dataclasses.replace(cfg0.ffn_sparsity, shards=2)
+    cfgS = dataclasses.replace(cfg0, ffn_sparsity=specS)
+    key = jax.random.PRNGKey(0)
+    p0 = L.init_mlp(cfg0, key, jnp.float32, seed_hint=3)
+    pS = L.init_mlp(cfgS, key, jnp.float32, seed_hint=3)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, cfg0.d_model),
+                          jnp.float32)
+    y0 = L.mlp(cfg0, p0, x)
+    yS = L.mlp(cfgS, pS, x)
+    np.testing.assert_allclose(np.asarray(yS), np.asarray(y0),
+                               rtol=1e-4, atol=1e-4)
