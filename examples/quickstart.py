@@ -72,4 +72,26 @@ print(f"sharded over {n_shards} {'devices' if mesh else 'slices (local)'}: "
       f"loads={stats['loads']} (imbalance {stats['imbalance']}x), "
       f"max err {float(jnp.max(jnp.abs(y_sharded - y_dense))):.2e}")
 assert float(jnp.max(jnp.abs(y_sharded - y_dense))) < 1e-3
+
+# 6. the MODEL path: the same partitioned execution as a layer spec
+# (SparsitySpec(shards=...) -> init_sparse_linear -> apply_sparse_linear —
+# what transformer FFN blocks, the serve engine, and launch.train trace).
+# The layer's structure metadata is STATIC aux data, deterministic in
+# (seed, dims, spec): sparse_linear_meta reproduces exactly the meta init
+# returned, so every apply dispatches each shard on its REAL structure
+# stats — heterogeneous per-shard picks, no params needed to plan them.
+from repro.core.sparse_linear import (SparsitySpec, apply_sparse_linear,
+                                      init_sparse_linear,
+                                      sparse_linear_meta)
+spec = SparsitySpec(density=0.2, block=(16, 16), backend="auto",
+                    shards=n_shards, interpret=True)
+params, lmeta = init_sparse_linear(0, 256, 512, spec, dtype=jnp.float32)
+assert sparse_linear_meta(0, 256, 512, spec) == lmeta   # static re-derivation
+x = jnp.asarray(np.random.default_rng(2).standard_normal(
+    (2, 8, 256)).astype(np.float32))
+with dist_spmm.use_spmm_mesh(mesh):                     # None -> local path
+    y = apply_sparse_linear(params, lmeta, x, spec)
+picks = ["{}/bn{}".format(*ops.resolve_backend("auto", spec.bn, m, 16))
+         for m in lmeta.shard_metas]
+print(f"model-path sharded layer: y {y.shape}, per-shard auto picks {picks}")
 print("OK")

@@ -7,12 +7,20 @@ block structure (dx) and the SDDMM kernel (dW) — all through
 ``kernels.ops.spmm``'s custom VJP.
 
 Patterns are generated with exact nnzb and full row/col coverage so layers
-can be stacked along a scan axis (all leaves share shapes).
+can be stacked along a scan axis (all leaves share shapes).  Patterns are
+STRUCTURAL and deterministic in a python-int seed, which is what makes the
+static structure-metadata pipeline work: ``sparse_linear_meta`` re-derives
+the exact init-time meta (true ``max_bpr``/padding/skew stats, per-shard
+``ShardedMeta``) from ``(seed, dims, spec)`` alone — no params needed — so
+the model apply path (``models.layers.mlp``) dispatches on real structure
+stats while the stats ride as hashable STATIC aux data, never as pytree
+leaves (see ``docs/ARCHITECTURE.md``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,13 +54,32 @@ class SparsitySpec:
     ``shards > 0`` switches the layer to the PARTITIONED execution path
     (``launch.dist_spmm``): the weight is split over block-rows into
     ``shards`` load-balanced slices with static per-shard schedules, each
-    shard resolves its own kernel variant, and the apply runs as a
-    ``shard_map`` when a compatible mesh is active
+    shard resolves its own kernel variant from its REAL structure stats
+    (the per-shard ``SparseMeta`` inside the returned ``ShardedMeta``),
+    and the apply runs as a ``shard_map`` when a compatible mesh is active
     (``dist_spmm.use_spmm_mesh``) or as the in-process equivalent
     otherwise.  Per-shard slice shapes are derived from the layer dims
     alone (``shard_shapes``), so scan-stacked layers with different
     structures still share every leaf shape.  ``shard_cols`` adds the
     optional 2D column split over the activation panel.
+
+    Example — a partitioned block-sparse layer, applied and then
+    re-derived statically (no params) via ``sparse_linear_meta``:
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core.sparse_linear import (SparsitySpec,
+    ...     apply_sparse_linear, init_sparse_linear, sparse_linear_meta)
+    >>> spec = SparsitySpec(density=0.3, block=(16, 16), backend="auto",
+    ...                     shards=2)
+    >>> params, meta = init_sparse_linear(0, 64, 96, spec,
+    ...                                   dtype=jnp.float32)
+    >>> (meta.n_shards, all(m.max_bpr > 0 for m in meta.shard_metas))
+    (2, True)
+    >>> x = jnp.ones((2, 3, 64), jnp.float32)
+    >>> apply_sparse_linear(params, meta, x, spec).shape
+    (2, 3, 96)
+    >>> sparse_linear_meta(0, 64, 96, spec) == meta    # static re-derivation
+    True
     """
     density: float = 0.1            # fraction of nonzero blocks
     block: Tuple[int, int] = (128, 128)
@@ -105,6 +132,95 @@ def shard_shapes(spec: SparsitySpec, out_dim: int, in_dim: int):
     return rps, nnzb_ps, nnzb_ps + nbc
 
 
+def _pattern_for(seed: int, in_dim: int, out_dim: int,
+                 spec: SparsitySpec) -> bcsr_lib.BCSR:
+    """THE weight pattern of ``(seed, dims, spec)`` — single construction
+    site shared by ``init_sparse_linear`` (arrays + meta) and
+    ``sparse_linear_meta`` (meta only), so the two derivations can never
+    drift apart."""
+    return bcsr_lib.random_bcsr_exact(
+        seed, (out_dim, in_dim), spec.block,
+        _nnzb_for(spec, out_dim, in_dim), dtype=np.float32)
+
+
+@functools.lru_cache(maxsize=None)
+def sparse_linear_meta(seed: int, in_dim: int, out_dim: int,
+                       spec: SparsitySpec):
+    """True structure meta of the layer ``init_sparse_linear(seed, ...)``
+    builds, derived WITHOUT allocating params — memoized host work.
+
+    Patterns are deterministic in the python-int ``seed``, so the meta
+    (real ``max_bpr`` / padding / skew stats after the spec's ``reorder``;
+    the full per-shard ``ShardedMeta`` when ``spec.shards > 0``) is a pure
+    static function of ``(seed, dims, spec)``.  The model path uses this
+    at trace time (``models.layers.mlp``) so ``backend="auto"`` resolves
+    heterogeneous per-shard kernel picks and ``row_loop`` sizes its static
+    schedule from the permuted structure — identically to dispatching on
+    the meta ``init_sparse_linear`` returned."""
+    a = _pattern_for(seed, in_dim, out_dim, spec)
+    if spec.shards > 0:
+        from repro.launch import dist_spmm  # local: layering
+        rps, nnzb_ps, _ = shard_shapes(spec, out_dim, in_dim)
+        return dist_spmm.prepare_sharded_meta(
+            a, spec.shards, col_shards=spec.shard_cols,
+            reorder=spec.reorder, rows_per_shard=rps,
+            nnzb_per_shard=nnzb_ps)
+    return ops.prepare_sparse_meta(
+        a, reorder=spec.reorder, reorder_granularity="block_row",
+        n_shards=_reorder_shards(spec))
+
+
+def _merge_two(m0: ops.SparseMeta, m1: ops.SparseMeta) -> ops.SparseMeta:
+    static0 = dataclasses.replace(m0, max_bpr=0, padding_ratio_pct=0,
+                                  bpr_cv_pct=0)
+    static1 = dataclasses.replace(m1, max_bpr=0, padding_ratio_pct=0,
+                                  bpr_cv_pct=0)
+    if static0 != static1:
+        raise ValueError(
+            f"cannot merge metas with different static structure:\n"
+            f"  {static0}\n  {static1}")
+    return dataclasses.replace(
+        m0, max_bpr=max(m0.max_bpr, m1.max_bpr),
+        padding_ratio_pct=max(m0.padding_ratio_pct, m1.padding_ratio_pct),
+        bpr_cv_pct=max(m0.bpr_cv_pct, m1.bpr_cv_pct))
+
+
+def merge_sparse_metas(metas):
+    """Conservative merge of per-layer structure metas into ONE stack meta.
+
+    Scan-stacked layers share a spec (identical shapes / nnzb / budgets)
+    but draw different structures; the scanned body traces once, so it
+    must dispatch on a single static meta.  The merge keeps the shared
+    static fields and takes the elementwise MAX of the stats
+    (``max_bpr`` — so a ``row_loop`` schedule covers every layer —
+    padding, and skew); for ``ShardedMeta`` the per-shard metas merge
+    shard-wise, preserving cross-shard heterogeneity.  Raises if the
+    metas' static structure differs (different specs were mixed)."""
+    metas = list(metas)
+    if not metas:
+        raise ValueError("merge_sparse_metas needs at least one meta")
+    first = metas[0]
+    if isinstance(first, ops.SparseMeta):
+        out = first
+        for m in metas[1:]:
+            out = _merge_two(out, m)
+        return out
+    # ShardedMeta: merge shard-wise (lazy import keeps core -> launch
+    # layering one-directional at module load)
+    from repro.launch import dist_spmm  # local: layering
+    if not isinstance(first, dist_spmm.ShardedMeta):
+        raise TypeError(f"unknown meta type {type(first).__name__}")
+    for m in metas[1:]:
+        if dataclasses.replace(m, shard_metas=()) != \
+                dataclasses.replace(first, shard_metas=()):
+            raise ValueError(
+                "cannot merge ShardedMetas with different static structure")
+    shard_metas = tuple(
+        functools.reduce(_merge_two, [m.shard_metas[s] for m in metas])
+        for s in range(first.n_shards))
+    return dataclasses.replace(first, shard_metas=shard_metas)
+
+
 def init_sparse_linear(key: int, in_dim: int, out_dim: int,
                        spec: SparsitySpec, dtype=jnp.bfloat16):
     """Returns (params, meta): params is a pytree of device arrays (vals is
@@ -113,10 +229,13 @@ def init_sparse_linear(key: int, in_dim: int, out_dim: int,
 
     With ``spec.shards > 0`` the params carry the row-partitioned index
     structure from ``launch.dist_spmm.prepare_sharded`` instead (``vals``
-    stays the flat trainable leaf) and ``meta`` is a ``ShardedMeta``."""
-    a = bcsr_lib.random_bcsr_exact(
-        key, (out_dim, in_dim), spec.block, _nnzb_for(spec, out_dim, in_dim),
-        dtype=np.float32)
+    stays the flat trainable leaf) and ``meta`` is a ``ShardedMeta``.
+
+    The returned meta carries the layer's TRUE structure stats and is
+    reproducible without params: ``sparse_linear_meta(key, in_dim,
+    out_dim, spec)`` returns an equal meta (the specs-vs-init contract
+    ``tests/test_static_meta.py`` pins)."""
+    a = _pattern_for(key, in_dim, out_dim, spec)
     if spec.shards > 0:
         from repro.launch import dist_spmm  # local: layering
         rps, nnzb_ps, _ = shard_shapes(spec, out_dim, in_dim)
@@ -126,7 +245,7 @@ def init_sparse_linear(key: int, in_dim: int, out_dim: int,
             nnzb_per_shard=nnzb_ps)
         if spec.backend == "auto" and spec.tune_n > 0:
             # sharded analogue of the unsharded tune() below: measured
-            # winners land under each shard's v3 fingerprint
+            # winners land under each shard's v4 fingerprint
             dist_spmm.tune_shards(sharr, smeta, spec.tune_n,
                                   interpret=spec.interpret)
         params = {
@@ -167,15 +286,24 @@ def init_sparse_linear(key: int, in_dim: int, out_dim: int,
 
 
 def sparse_linear_specs(in_dim: int, out_dim: int, spec: SparsitySpec,
-                        dtype=jnp.bfloat16):
-    """ShapeDtypeStruct pytree (dry-run path — no host work, no allocation).
+                        dtype=jnp.bfloat16, seed: Optional[int] = None):
+    """ShapeDtypeStruct pytree for the layer (dry-run / scan planning).
 
     With ``spec.shards > 0`` the specs mirror the partitioned layout of
     ``init_sparse_linear`` exactly — every per-shard size comes from
     ``shard_shapes`` (dims only), so specs and real params always agree.
-    The per-shard metas carry no structure stats (max_bpr = 0), matching
-    the unsharded specs' behavior: ``auto`` dispatch falls back to the
-    streaming kernel, ``row_loop`` raises."""
+
+    ``seed`` controls the returned META's stats.  With the layer's actual
+    init seed, the meta is the TRUE structure meta (``sparse_linear_meta``
+    — real per-shard stats, real post-reorder ``max_bpr``), equal to what
+    ``init_sparse_linear(seed, ...)`` returns; the params stay
+    ShapeDtypeStructs either way.  With ``seed=None`` (pure dims-only
+    mode, no host work at all) the stats are zero: ``auto`` dispatch falls
+    back to the streaming kernel and ``row_loop`` raises — fine for
+    shape/sharding proofs, wrong for kernel-choice questions."""
+    if seed is not None:
+        params, _ = sparse_linear_specs(in_dim, out_dim, spec, dtype)
+        return params, sparse_linear_meta(seed, in_dim, out_dim, spec)
     h, w = spec.block
     nnzb = _nnzb_for(spec, out_dim, in_dim)
     nbr, nbc = -(-out_dim // h), -(-in_dim // w)
@@ -228,9 +356,7 @@ def shard_balance_report(in_dim: int, out_dim: int, spec: SparsitySpec,
     (host-only; the dry-run prints it so the partition quality is visible
     before any launch)."""
     from repro.launch import dist_spmm  # local: layering
-    a = bcsr_lib.random_bcsr_exact(
-        seed, (out_dim, in_dim), spec.block,
-        _nnzb_for(spec, out_dim, in_dim), dtype=np.float32)
+    a = _pattern_for(seed, in_dim, out_dim, spec)
     rps, _, _ = shard_shapes(spec, out_dim, in_dim)
     return dist_spmm.shard_balance_stats(a, spec.shards, rows_per_shard=rps)
 

@@ -150,7 +150,11 @@ class Fingerprint:
     key too: a shard of a row-partitioned operand (``launch.dist_spmm``)
     has its own stats AND a different execution context (its N-tile shares
     the device with the other shards), so per-shard picks must not alias
-    the unsharded twin's entries."""
+    the unsharded twin's entries.  ``max_bpr`` (v4) carries the
+    ``row_loop`` schedule bound EXACTLY (not bucketed): reordering shrinks
+    it, the static schedule length is ``n_block_rows * max_bpr``, and two
+    structures whose other stats coincide but whose schedule bounds differ
+    must never share a cached ``row_loop`` decision."""
     n_block_rows: int
     n_block_cols: int
     block: Tuple[int, int]
@@ -160,35 +164,38 @@ class Fingerprint:
     n_bucket: int        # next pow2 of N
     reorder: str = "identity"
     n_shards: int = 1    # shard count of the partitioned operand (1 = whole)
+    max_bpr: int = 0     # row_loop schedule bound (0 = unknown/dims-only)
 
     def key(self) -> str:
         h, w = self.block
-        return (f"v3|nbr={self.n_block_rows}|nbc={self.n_block_cols}"
+        return (f"v4|nbr={self.n_block_rows}|nbc={self.n_block_cols}"
                 f"|b={h}x{w}|nnzb={self.nnzb}|pad={self.pad_bucket}"
                 f"|skew={self.skew_bucket}|n={self.n_bucket}"
-                f"|ro={self.reorder}|ns={self.n_shards}")
+                f"|ro={self.reorder}|ns={self.n_shards}|mb={self.max_bpr}")
 
 
 def _make_fingerprint(nbr: int, nbc: int, block, nnzb: int,
                       pad_pct: int, cv_pct: int, n: int,
                       reorder: str = "identity",
-                      n_shards: int = 1) -> Fingerprint:
+                      n_shards: int = 1, max_bpr: int = 0) -> Fingerprint:
     """Single bucketing site for both fingerprint paths — the meta-side and
     BCSR-side keys must agree bit-for-bit or cached picks stop matching."""
     return Fingerprint(
         n_block_rows=nbr, n_block_cols=nbc, block=tuple(block), nnzb=nnzb,
         pad_bucket=pad_pct // 10, skew_bucket=cv_pct // 25,
-        n_bucket=_pow2_bucket(n), reorder=reorder, n_shards=n_shards)
+        n_bucket=_pow2_bucket(n), reorder=reorder, n_shards=n_shards,
+        max_bpr=max_bpr)
 
 
 def fingerprint(meta: ops.SparseMeta, n: int) -> Fingerprint:
     """Fingerprint from the static meta ``prepare_sparse`` built (or a
     per-shard meta from ``dist_spmm.prepare_sharded`` — its ``n_shards``
-    rides into the v3 key)."""
+    and ``max_bpr`` ride into the v4 key)."""
     return _make_fingerprint(meta.n_block_rows, meta.n_block_cols,
                              meta.block, meta.nnzb,
                              meta.padding_ratio_pct, meta.bpr_cv_pct, n,
-                             reorder=meta.reorder, n_shards=meta.n_shards)
+                             reorder=meta.reorder, n_shards=meta.n_shards,
+                             max_bpr=meta.max_bpr)
 
 
 def fingerprint_bcsr(a: bcsr_lib.BCSR, n: int,
@@ -200,9 +207,10 @@ def fingerprint_bcsr(a: bcsr_lib.BCSR, n: int,
     pass the same value given to ``prepare_sparse``; the matrix itself is
     not re-permuted here."""
     a_p = a.ensure_nonempty_rows()
-    _, pad_pct, cv_pct = a_p.dispatch_stats()
+    max_bpr, pad_pct, cv_pct = a_p.dispatch_stats()
     return _make_fingerprint(a_p.n_block_rows, a_p.n_block_cols, a_p.block,
-                             a_p.nnzb, pad_pct, cv_pct, n, reorder=reorder)
+                             a_p.nnzb, pad_pct, cv_pct, n, reorder=reorder,
+                             max_bpr=max_bpr)
 
 
 # -------------------------------------------------------------------- choice
@@ -268,9 +276,29 @@ def analytic_choice(meta: ops.SparseMeta, n: int) -> KernelChoice:
 class Autotuner:
     """Fingerprint -> KernelChoice cache with analytic and measured fills.
 
-    ``cache_path`` (or ``$REPRO_AUTOTUNE_CACHE``) mirrors the table to JSON
-    so benchmark runs warm serving processes; loading tolerates a missing or
-    corrupt file (starts empty), saving is atomic (tmp + rename).
+    ``cache_path`` (or the ``REPRO_AUTOTUNE_CACHE`` environment variable —
+    set it to a writable ``<path>.json`` to share tuned picks across
+    processes, e.g. from an offline benchmark run into a serving process)
+    mirrors the table to JSON; loading tolerates a missing or corrupt file
+    (starts empty), saving is atomic (tmp + rename).  With neither set the
+    cache is in-memory only.
+
+    A cache MISS never blocks dispatch: ``pick`` falls back to the
+    analytic perf-model choice (paper Eq. 1), so ``backend="auto"`` is
+    always trace-safe.  Timed sweeps only run via explicit ``tune()`` /
+    ``dist_spmm.tune_shards`` calls.
+
+    >>> import numpy as np
+    >>> from repro.core import bcsr as bcsr_lib
+    >>> from repro.kernels import autotune, ops
+    >>> a = bcsr_lib.random_bcsr_exact(0, (256, 256), (16, 16), nnzb=64)
+    >>> meta = ops.prepare_sparse_meta(a)
+    >>> tuner = autotune.Autotuner()          # in-memory (no cache file)
+    >>> choice = tuner.pick(meta, n=128)
+    >>> choice.variant in autotune.variant_names()
+    True
+    >>> tuner.pick(meta, n=128) is choice     # cached under the v4 key
+    True
     """
 
     def __init__(self, cache_path: Optional[str] = None):

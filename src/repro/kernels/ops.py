@@ -64,8 +64,12 @@ class SparseMeta:
     The trailing stats fields feed the autotuner's fingerprint (and the
     ``row_loop`` backend, which needs ``max_bpr`` to size its static
     schedule).  They default to "unknown" so hand-built metas (e.g. the
-    dry-run's ``sparse_linear_specs``) keep working — the autotuner simply
-    won't propose ``row_loop`` for those.
+    dry-run's dims-only ``sparse_linear_specs``) keep working — the
+    autotuner simply won't propose ``row_loop`` for those.  Because the
+    whole dataclass is hashable, a meta is safe to close over inside jit
+    traces and to ride through scan-stacked model layers as STATIC aux
+    data (never as a pytree leaf) — the contract
+    ``docs/ARCHITECTURE.md`` spells out.
     """
     shape: Tuple[int, int]          # logical (M, K)
     block: Tuple[int, int]          # (h, w)
@@ -85,6 +89,16 @@ class SparseMeta:
                                     # per-shard picks never alias the
                                     # unsharded twin's cache entries
 
+    @property
+    def row_loop_sched_len(self) -> int:
+        """Length of the ``row_loop`` backend's static schedule (grid
+        entries per N-tile): ``n_block_rows * max_bpr``.  0 when the bound
+        is unknown (dims-only meta).  Reordering that clusters similar
+        rows shrinks ``max_bpr`` and therefore this length — the quantity
+        ``bench_reorder`` reports and the v4 autotune fingerprint keys on.
+        """
+        return self.n_block_rows * max(self.max_bpr, 0)
+
 
 # accepted aliases -> canonical SpmmConfig.backend strings
 _BACKEND_ALIASES = {"nnz_stream": "pallas"}
@@ -100,25 +114,14 @@ class SpmmConfig:
 
 
 # ------------------------------------------------------------------- prepare
-def prepare_sparse(a: bcsr_lib.BCSR, dtype=jnp.bfloat16, *,
-                   reorder: str = "identity",
-                   reorder_granularity: str = "element",
-                   tau: float = 0.7, max_candidates: Optional[int] = None,
-                   n_shards: int = 8
-                   ) -> Tuple[SparseArrays, SparseMeta]:
-    """Host BCSR -> kernel-ready device arrays + static meta.
-
-    ``reorder`` applies a block-densifying row permutation first (any
-    scheme in ``core.permute.SCHEMES`` that yields a pure row permutation:
-    ``jaccard`` | ``rcm`` | ``shard_balance`` | ``identity``).  The
-    permutation is transparent downstream: ``spmm`` un-permutes its output
-    (C = P^T (A' B)) and the custom VJP carries P through dB and dvals, so
-    results match ``reorder="identity"`` while the kernel streams the
-    denser A'.  ``reorder_granularity="element"`` (default) re-blocks the
-    permuted NONZERO structure — explicitly-stored zero blocks do not
-    survive it; ``"block_row"`` permutes whole block-rows instead (nnzb
-    and all stored entries preserved — the model-weight path, where
-    stacked leaf shapes must be static and zero blocks stay trainable)."""
+def _prepare_sparse_host(a: bcsr_lib.BCSR, *, reorder: str,
+                         reorder_granularity: str, tau: float,
+                         max_candidates: Optional[int], n_shards: int):
+    """Host-side (numpy) portion of ``prepare_sparse``: permute, pad,
+    build the transpose structure, and compute the static meta.  Returns
+    ``(host_arrays_dict, meta)``; ``prepare_sparse`` converts the arrays
+    to device, ``prepare_sparse_meta`` keeps only the meta (the static
+    structure-metadata pipeline the model layers dispatch on)."""
     from repro.core import permute as permute_lib  # local: import cycle
     a, row_perm_np = permute_lib.permute_bcsr(
         a, reorder, tau=tau, max_candidates=max_candidates,
@@ -149,17 +152,17 @@ def prepare_sparse(a: bcsr_lib.BCSR, dtype=jnp.bfloat16, *,
                                         t_col_ids[order_t])
 
     inv_perm_np = permute_lib.invert_perm(row_perm_np)
-    arrays = SparseArrays(
-        vals=jnp.asarray(a_p.vals, dtype=dtype),
-        row_ids=jnp.asarray(a_p.row_ids, dtype=jnp.int32),
-        col_ids=jnp.asarray(a_p.col_ids, dtype=jnp.int32),
-        real_mask=jnp.asarray(real_mask),
-        t_perm=jnp.asarray(t_perm, dtype=jnp.int32),
-        t_row_ids=jnp.asarray(t_row_ids, dtype=jnp.int32),
-        t_col_ids=jnp.asarray(t_col_ids, dtype=jnp.int32),
-        row_perm=jnp.asarray(row_perm_np, dtype=jnp.int32),
-        inv_perm=jnp.asarray(inv_perm_np, dtype=jnp.int32),
-    )
+    host = {
+        "vals": a_p.vals,
+        "row_ids": a_p.row_ids,
+        "col_ids": a_p.col_ids,
+        "real_mask": real_mask,
+        "t_perm": t_perm,
+        "t_row_ids": t_row_ids,
+        "t_col_ids": t_col_ids,
+        "row_perm": row_perm_np,
+        "inv_perm": inv_perm_np,
+    }
     max_bpr, pad_pct, cv_pct = a_p.dispatch_stats()
     meta = SparseMeta(shape=a_p.shape, block=a_p.block,
                       n_block_rows=a_p.n_block_rows,
@@ -167,7 +170,79 @@ def prepare_sparse(a: bcsr_lib.BCSR, dtype=jnp.bfloat16, *,
                       nnzb=a_p.nnzb, nnzb_t=int(t_row_ids.shape[0]),
                       max_bpr=max_bpr, padding_ratio_pct=pad_pct,
                       bpr_cv_pct=cv_pct, reorder=reorder)
+    return host, meta
+
+
+def prepare_sparse(a: bcsr_lib.BCSR, dtype=jnp.bfloat16, *,
+                   reorder: str = "identity",
+                   reorder_granularity: str = "element",
+                   tau: float = 0.7, max_candidates: Optional[int] = None,
+                   n_shards: int = 8
+                   ) -> Tuple[SparseArrays, SparseMeta]:
+    """Host BCSR -> kernel-ready device arrays + static meta.
+
+    ``reorder`` applies a block-densifying row permutation first (any
+    scheme in ``core.permute.SCHEMES`` that yields a pure row permutation:
+    ``jaccard`` | ``rcm`` | ``shard_balance`` | ``identity``).  The
+    permutation is transparent downstream: ``spmm`` un-permutes its output
+    (C = P^T (A' B)) and the custom VJP carries P through dB and dvals, so
+    results match ``reorder="identity"`` while the kernel streams the
+    denser A'.  ``reorder_granularity="element"`` (default) re-blocks the
+    permuted NONZERO structure — explicitly-stored zero blocks do not
+    survive it; ``"block_row"`` permutes whole block-rows instead (nnzb
+    and all stored entries preserved — the model-weight path, where
+    stacked leaf shapes must be static and zero blocks stay trainable).
+
+    The returned ``meta`` carries the POST-reorder structure stats
+    (``max_bpr``, padding, skew) — the autotune fingerprint and the
+    ``row_loop`` static schedule are both derived from the permuted
+    structure, so clustering that densifies block-rows shrinks the
+    schedule (``meta.row_loop_sched_len``).
+
+    Example (a block-diagonal 32x32 with 8x8 blocks):
+
+    >>> import numpy as np, jax.numpy as jnp
+    >>> from repro.core import bcsr as bcsr_lib
+    >>> from repro.kernels import ops
+    >>> dense = np.kron(np.eye(4, dtype=np.float32), np.ones((8, 8)))
+    >>> a = bcsr_lib.from_dense(dense.astype(np.float32), (8, 8))
+    >>> arrays, meta = ops.prepare_sparse(a, dtype=jnp.float32)
+    >>> (meta.nnzb, meta.max_bpr, meta.row_loop_sched_len)
+    (4, 1, 4)
+    """
+    host, meta = _prepare_sparse_host(
+        a, reorder=reorder, reorder_granularity=reorder_granularity,
+        tau=tau, max_candidates=max_candidates, n_shards=n_shards)
+    arrays = SparseArrays(
+        vals=jnp.asarray(host["vals"], dtype=dtype),
+        row_ids=jnp.asarray(host["row_ids"], dtype=jnp.int32),
+        col_ids=jnp.asarray(host["col_ids"], dtype=jnp.int32),
+        real_mask=jnp.asarray(host["real_mask"]),
+        t_perm=jnp.asarray(host["t_perm"], dtype=jnp.int32),
+        t_row_ids=jnp.asarray(host["t_row_ids"], dtype=jnp.int32),
+        t_col_ids=jnp.asarray(host["t_col_ids"], dtype=jnp.int32),
+        row_perm=jnp.asarray(host["row_perm"], dtype=jnp.int32),
+        inv_perm=jnp.asarray(host["inv_perm"], dtype=jnp.int32),
+    )
     return arrays, meta
+
+
+def prepare_sparse_meta(a: bcsr_lib.BCSR, *, reorder: str = "identity",
+                        reorder_granularity: str = "element",
+                        tau: float = 0.7,
+                        max_candidates: Optional[int] = None,
+                        n_shards: int = 8) -> SparseMeta:
+    """The static meta ``prepare_sparse`` would return, WITHOUT building
+    device arrays — bit-identical by construction (same host pipeline).
+
+    This is the backbone of the static structure-metadata pipeline: model
+    layers re-derive the true post-reorder stats of a deterministic weight
+    pattern at trace time (``core.sparse_linear.sparse_linear_meta``
+    memoizes it), so ``backend="auto"`` and ``row_loop`` dispatch on real
+    ``max_bpr``/padding/skew instead of dims-only zeros."""
+    return _prepare_sparse_host(
+        a, reorder=reorder, reorder_granularity=reorder_granularity,
+        tau=tau, max_candidates=max_candidates, n_shards=n_shards)[1]
 
 
 # ------------------------------------------------------------ forward pieces
@@ -363,7 +438,9 @@ def resolve_backend(backend: str, bn: int, meta: SparseMeta,
         # a different kernel than the caller asked for
         raise ValueError(
             "backend='row_loop' needs meta.max_bpr > 0 (metas built by "
-            "prepare_sparse have it; hand-built specs metas do not)")
+            "prepare_sparse / prepare_sparse_meta have it; dims-only "
+            "specs metas do not — pass sparse_linear_specs a seed, or "
+            "use the model path's sparse_linear_meta)")
     return backend, bn
 
 
@@ -374,7 +451,25 @@ def spmm(arrays: SparseArrays, meta: SparseMeta, b: jnp.ndarray,
 
     A is the BCSR operand from ``prepare_sparse``; B is ``[K, N]`` dense.
     ``backend="auto"`` dispatches through the ``repro.kernels.autotune``
-    registry using the matrix's stats fingerprint.
+    registry using the matrix's stats fingerprint.  Outputs always come
+    back in ORIGINAL row order, whatever ``reorder`` scheme prepared A.
+
+    Example (sparse x dense against the dense oracle):
+
+    >>> import numpy as np, jax.numpy as jnp
+    >>> from repro.core import bcsr as bcsr_lib
+    >>> from repro.kernels import ops
+    >>> rng = np.random.default_rng(0)
+    >>> dense = np.kron(rng.random((4, 4)) < 0.5,
+    ...                 np.ones((8, 8))).astype(np.float32)
+    >>> a = bcsr_lib.from_dense(dense, (8, 8))
+    >>> arrays, meta = ops.prepare_sparse(a, dtype=jnp.float32)
+    >>> b = jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32))
+    >>> c = ops.spmm(arrays, meta, b, backend="xla")
+    >>> c.shape
+    (32, 16)
+    >>> bool(jnp.allclose(c, dense @ np.asarray(b), atol=1e-5))
+    True
     """
     backend, bn = resolve_backend(backend, bn, meta, int(b.shape[-1]))
     cfg = SpmmConfig(backend=backend, bn=bn, interpret=interpret,

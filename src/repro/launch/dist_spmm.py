@@ -18,7 +18,7 @@ scales past one chip.  This module turns the reorder pipeline's dormant
     identical math (the fallback when no compatible mesh exists — unit
     tests, single-chip serving).  Each shard resolves its OWN kernel
     variant through ``ops.resolve_backend``: per-shard metas carry
-    ``n_shards`` into the v3 autotune fingerprint, and shards whose picks
+    ``n_shards`` into the v4 autotune fingerprint, and shards whose picks
     differ dispatch through a ``lax.switch`` on the mesh axis index.
   * Results gather back to ORIGINAL row order (``gather_rows`` composes
     the optional pre-reorder with the partition permutation), so the
@@ -181,24 +181,17 @@ def _local_stats(rows: np.ndarray, vals_real: np.ndarray, rps: int,
             int(round(cv * 100)))
 
 
-def prepare_sharded(a: bcsr_lib.BCSR, n_shards: int, *,
-                    col_shards: int = 1, dtype=jnp.bfloat16,
-                    reorder: str = "identity", tau: float = 0.7,
-                    max_candidates: Optional[int] = None,
-                    rows_per_shard: Optional[int] = None,
-                    nnzb_per_shard: Optional[int] = None
-                    ) -> Tuple[ShardedArrays, ShardedMeta]:
-    """Host BCSR -> row-partitioned device arrays + static sharded meta.
-
-    ``reorder`` optionally applies a block-row permutation scheme FIRST
-    (``jaccard`` | ``rcm`` — densify, then balance); the partition itself
-    is the ``shard_balance`` assignment, so passing ``"shard_balance"`` or
-    ``"identity"`` skips the pre-permutation.  ``rows_per_shard`` /
-    ``nnzb_per_shard`` pin the per-shard static shapes (the model-weight
-    path derives them from dims so scan-stacked layers agree); omitted,
-    they are derived from the structure (tight fit).  Raises when the
-    structure cannot fit the pinned budget — static shapes are a contract,
-    not a best effort."""
+def _prepare_sharded_host(a: bcsr_lib.BCSR, n_shards: int, *,
+                          col_shards: int = 1,
+                          reorder: str = "identity", tau: float = 0.7,
+                          max_candidates: Optional[int] = None,
+                          rows_per_shard: Optional[int] = None,
+                          nnzb_per_shard: Optional[int] = None):
+    """Host-side (numpy) portion of ``prepare_sharded``: pre-reorder,
+    partition, per-shard index structure, and the static ``ShardedMeta``
+    with its per-shard structure stats.  Returns ``(host_arrays_dict,
+    meta)``; ``prepare_sharded`` converts to device arrays,
+    ``prepare_sharded_meta`` keeps only the meta."""
     if n_shards < 1:
         raise ValueError(f"n_shards must be >= 1, got {n_shards}")
     h, w = a.block
@@ -301,29 +294,100 @@ def prepare_sharded(a: bcsr_lib.BCSR, n_shards: int, *,
     perm_rows = inv_pre                       # position after pre-reorder
     gather = slot_of_br[perm_rows // h] * h + perm_rows % h
 
-    arrays = ShardedArrays(
-        vals=jnp.asarray(a_p.vals, dtype=dtype),
-        src_index=jnp.asarray(src, jnp.int32),
-        row_ids=jnp.asarray(rows, jnp.int32),
-        col_ids=jnp.asarray(cols, jnp.int32),
-        real_mask=jnp.asarray(mask),
-        t_perm=jnp.asarray(t_perm, jnp.int32),
-        t_row_ids=jnp.asarray(t_rows, jnp.int32),
-        t_col_ids=jnp.asarray(t_cols, jnp.int32),
-        gather_rows=jnp.asarray(gather, jnp.int32),
-    )
+    host = {
+        "vals": a_p.vals,
+        "src_index": src,
+        "row_ids": rows,
+        "col_ids": cols,
+        "real_mask": mask,
+        "t_perm": t_perm,
+        "t_row_ids": t_rows,
+        "t_col_ids": t_cols,
+        "gather_rows": gather,
+    }
     meta = ShardedMeta(shape=(M, K), block=(h, w), n_shards=n_shards,
                        col_shards=col_shards, rows_per_shard=rps,
                        nnzb=nnzb_g, nnzb_per_shard=nnzb_ps,
                        nnzb_t_per_shard=nnzb_t_ps, shard_metas=tuple(metas),
                        reorder=reorder)
+    return host, meta
+
+
+def prepare_sharded(a: bcsr_lib.BCSR, n_shards: int, *,
+                    col_shards: int = 1, dtype=jnp.bfloat16,
+                    reorder: str = "identity", tau: float = 0.7,
+                    max_candidates: Optional[int] = None,
+                    rows_per_shard: Optional[int] = None,
+                    nnzb_per_shard: Optional[int] = None
+                    ) -> Tuple[ShardedArrays, ShardedMeta]:
+    """Host BCSR -> row-partitioned device arrays + static sharded meta.
+
+    ``reorder`` optionally applies a block-row permutation scheme FIRST
+    (``jaccard`` | ``rcm`` — densify, then balance); the partition itself
+    is the ``shard_balance`` assignment, so passing ``"shard_balance"`` or
+    ``"identity"`` skips the pre-permutation.  ``rows_per_shard`` /
+    ``nnzb_per_shard`` pin the per-shard static shapes (the model-weight
+    path derives them from dims so scan-stacked layers agree); omitted,
+    they are derived from the structure (tight fit).  Raises when the
+    structure cannot fit the pinned budget — static shapes are a contract,
+    not a best effort.
+
+    Example (4-way partition of a 320x256 operand, local execution):
+
+    >>> import numpy as np, jax.numpy as jnp
+    >>> from repro.core import bcsr as bcsr_lib
+    >>> from repro.launch import dist_spmm
+    >>> a = bcsr_lib.random_bcsr_exact(7, (320, 256), (16, 16), nnzb=80)
+    >>> sharr, smeta = dist_spmm.prepare_sharded(a, 4, dtype=jnp.float32)
+    >>> (smeta.n_shards, smeta.rows_per_shard, len(smeta.shard_metas))
+    (4, 5, 4)
+    >>> all(m.max_bpr > 0 for m in smeta.shard_metas)  # real structure stats
+    True
+    """
+    host, meta = _prepare_sharded_host(
+        a, n_shards, col_shards=col_shards, reorder=reorder, tau=tau,
+        max_candidates=max_candidates, rows_per_shard=rows_per_shard,
+        nnzb_per_shard=nnzb_per_shard)
+    arrays = ShardedArrays(
+        vals=jnp.asarray(host["vals"], dtype=dtype),
+        src_index=jnp.asarray(host["src_index"], jnp.int32),
+        row_ids=jnp.asarray(host["row_ids"], jnp.int32),
+        col_ids=jnp.asarray(host["col_ids"], jnp.int32),
+        real_mask=jnp.asarray(host["real_mask"]),
+        t_perm=jnp.asarray(host["t_perm"], jnp.int32),
+        t_row_ids=jnp.asarray(host["t_row_ids"], jnp.int32),
+        t_col_ids=jnp.asarray(host["t_col_ids"], jnp.int32),
+        gather_rows=jnp.asarray(host["gather_rows"], jnp.int32),
+    )
     return arrays, meta
+
+
+def prepare_sharded_meta(a: bcsr_lib.BCSR, n_shards: int, *,
+                         col_shards: int = 1, reorder: str = "identity",
+                         tau: float = 0.7,
+                         max_candidates: Optional[int] = None,
+                         rows_per_shard: Optional[int] = None,
+                         nnzb_per_shard: Optional[int] = None) -> ShardedMeta:
+    """The static ``ShardedMeta`` that ``prepare_sharded`` would return,
+    WITHOUT building device arrays — bit-identical by construction (same
+    host pipeline, dtype only affects the arrays).
+
+    The model path uses this (memoized, via
+    ``core.sparse_linear.sparse_linear_meta``) to re-derive the true
+    per-shard structure stats of a deterministic weight pattern at trace
+    time, so ``apply_sparse_linear`` dispatches each shard on its real
+    fingerprint — heterogeneous per-shard picks, not one collapsed
+    streaming choice."""
+    return _prepare_sharded_host(
+        a, n_shards, col_shards=col_shards, reorder=reorder, tau=tau,
+        max_candidates=max_candidates, rows_per_shard=rows_per_shard,
+        nnzb_per_shard=nnzb_per_shard)[1]
 
 
 # ---------------------------------------------------------------- execution
 def _resolve_shard_choices(smeta: ShardedMeta, n_local: int, backend: str,
                            bn: int) -> Tuple[Tuple[str, int], ...]:
-    """Per-shard (backend, bn): ``auto`` consults the v3 per-shard
+    """Per-shard (backend, bn): ``auto`` consults the v4 per-shard
     fingerprints, so a skewed shard can run ``row_loop`` while its uniform
     neighbors stream nonzeros — the per-structure choice the global
     dispatch could not make.  ``n_local`` is the panel width each shard
@@ -353,7 +417,28 @@ def spmm_sharded(arrays: ShardedArrays, smeta: ShardedMeta, b: jnp.ndarray,
     ``n_shards`` (and ``AXIS_COL`` of size ``col_shards`` when 2D) runs it
     as a ``shard_map``.  Differentiable w.r.t. ``arrays.vals`` and ``b``
     through the per-shard custom VJPs; partial dB contributions psum
-    across row shards via the shard_map transpose."""
+    across row shards via the shard_map transpose.
+
+    ``backend="auto"`` resolves one (variant, bn) PER SHARD from the v4
+    per-shard fingerprints; heterogeneous picks dispatch via ``lax.switch``
+    on the mesh axis index.
+
+    Example (in-process fallback, checked against the unsharded oracle):
+
+    >>> import numpy as np, jax.numpy as jnp
+    >>> from repro.core import bcsr as bcsr_lib
+    >>> from repro.kernels import ops
+    >>> from repro.launch import dist_spmm
+    >>> a = bcsr_lib.random_bcsr_exact(7, (320, 256), (16, 16), nnzb=80)
+    >>> sharr, smeta = dist_spmm.prepare_sharded(a, 4, dtype=jnp.float32)
+    >>> b = jnp.asarray(np.random.default_rng(0).standard_normal(
+    ...     (256, 32)).astype(np.float32))
+    >>> c = dist_spmm.spmm_sharded(sharr, smeta, b, backend="xla")
+    >>> arrays, meta = ops.prepare_sparse(a, dtype=jnp.float32)
+    >>> bool(jnp.allclose(c, ops.spmm(arrays, meta, b, backend="xla"),
+    ...                   atol=1e-4))
+    True
+    """
     M, K = smeta.shape
     N = int(b.shape[-1])
     S = smeta.n_shards
@@ -445,7 +530,7 @@ def tune_shards(arrays: ShardedArrays, smeta: ShardedMeta, n: int, *,
                 rng_seed: int = 0, tuner=None) -> dict:
     """Timed per-shard micro-sweep (the sharded analogue of
     ``Autotuner.tune``): times every registered candidate on each shard's
-    LOCAL slice and caches the winner under the shard's v3 fingerprint,
+    LOCAL slice and caches the winner under the shard's v4 fingerprint,
     so later ``backend="auto"`` dispatch picks measured winners per shard.
     Shards whose fingerprints coincide (well-balanced partitions — the
     common case) are timed once.  Returns {fingerprint_key: choice}."""

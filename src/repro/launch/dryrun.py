@@ -213,18 +213,41 @@ def run_cell(cfg, shape: ShapeCell, mesh, *, remat: str = "full",
     return rec
 
 
-def sparse_shard_report(cfg) -> dict:
-    """Per-shard nnzb balance of the arch's partitioned sparse FFN
-    (``SparsitySpec(shards=...)``) — empty when the arch has none.  Printed
-    per arch so the LPT partition quality is visible before any launch."""
+def sparse_shard_report(cfg, n_tokens: int = 512) -> dict:
+    """Per-shard nnzb balance AND autotune kernel picks of the arch's
+    partitioned sparse FFN (``SparsitySpec(shards=...)``) — empty when the
+    arch has none.  Printed per arch so the LPT partition quality and the
+    per-shard variant choices are visible before any launch.
+
+    The picks come from the SAME static metas the model path dispatches
+    on (``models.layers.mlp_sparse_metas`` — true per-shard structure
+    stats merged over the layer stack), resolved as ``backend="auto"``
+    for an ``n_tokens``-wide activation panel."""
     spec = cfg.ffn_sparsity
     if spec is None or getattr(spec, "shards", 0) < 1:
         return {}
     from repro.core import sparse_linear as sl
-    return {
-        "gate_up": sl.shard_balance_report(cfg.d_model, cfg.d_ff, spec),
-        "down": sl.shard_balance_report(cfg.d_ff, cfg.d_model, spec),
+    from repro.kernels import ops as kops
+    from repro.models import layers as L
+    from repro.models.transformer import _mlp_seed_hints
+    # balance and picks must describe the SAME structures: use the real
+    # pattern seeds of the first layer's gate / down weights (mlp_seed),
+    # not shard_balance_report's default probe seed
+    seed0 = L.mlp_seed(_mlp_seed_hints(cfg)[0])
+    rep = {
+        "gate_up": sl.shard_balance_report(cfg.d_model, cfg.d_ff, spec,
+                                           seed=seed0),
+        "down": sl.shard_balance_report(cfg.d_ff, cfg.d_model, spec,
+                                        seed=seed0 + 2),
     }
+    meta_in, meta_out = L.mlp_sparse_metas(
+        spec, cfg.d_model, cfg.d_ff, _mlp_seed_hints(cfg))
+    for lname, m in (("gate_up", meta_in), ("down", meta_out)):
+        rep[lname]["auto_picks"] = [
+            "{}/bn{}".format(*kops.resolve_backend("auto", spec.bn, sm,
+                                                   n_tokens))
+            for sm in m.shard_metas]
+    return rep
 
 
 def main(argv=None):
@@ -265,7 +288,8 @@ def main(argv=None):
                 print(f"[dryrun] {cfg.name} sparse shard balance [{lname}]: "
                       f"{r['n_shards']} shards, nnzb loads {r['loads']} "
                       f"(imbalance {r['imbalance']}x vs contiguous "
-                      f"{r['contig_imbalance']}x)")
+                      f"{r['contig_imbalance']}x), "
+                      f"auto picks {r['auto_picks']}")
             records.append({"arch": cfg.name, "status": "sparse_shards",
                             "sparse_shards": shard_rep})
         for s in shapes:

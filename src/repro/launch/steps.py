@@ -2,6 +2,13 @@
 
 These are the exact functions the dry-run lowers at 256/512 devices and the
 train/serve loops execute for real; one definition, both uses.
+
+Sparse-FFN archs need no special handling here: the structure metadata the
+SpMM dispatch keys on is STATIC aux data re-derived inside ``mlp()`` from
+the arch config (``models.layers.mlp_sparse_metas``), so every step traced
+from these functions — train, prefill, decode — resolves the same real
+per-shard kernel picks as the raw ``dist_spmm`` API, with no extra
+arguments threaded through params or inputs.
 """
 from __future__ import annotations
 

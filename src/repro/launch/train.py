@@ -48,6 +48,17 @@ def main(argv=None):
     cfg = get_config(args.arch)
     shape = ShapeCell("cli", "train", args.seq, args.batch)
 
+    if cfg.ffn_sparsity is not None and cfg.ffn_sparsity.shards > 0:
+        # partitioned sparse FFN: surface the per-shard balance and the
+        # autotune picks the model path will dispatch with (the static
+        # metas mlp() derives — the same ones the train step traces against)
+        from repro.launch.dryrun import sparse_shard_report
+        rep = sparse_shard_report(cfg, n_tokens=args.batch * args.seq)
+        for lname, r in rep.items():
+            logging.getLogger("train").info(
+                "sparse FFN [%s]: %d shards, nnzb loads %s, auto picks %s",
+                lname, r["n_shards"], r["loads"], r["auto_picks"])
+
     def mesh_factory(restart_idx: int):
         if args.mesh_shape:
             dims = tuple(int(x) for x in args.mesh_shape.split(","))

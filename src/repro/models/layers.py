@@ -19,7 +19,8 @@ from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
 
 from repro.core.sparse_linear import (apply_sparse_linear,
                                       init_sparse_linear,
-                                      sparse_linear_specs)
+                                      merge_sparse_metas,
+                                      sparse_linear_meta)
 from repro.models import unroll as U
 
 # chunk size for q-blocked (flash-style, O(L*chunk) memory) attention
@@ -314,6 +315,19 @@ def init_mla_cache(cfg, batch, cache_len, dtype):
 
 
 # ======================================================================= MLP
+# python-int seed of the structural sparse pattern for one init_mlp call —
+# THE single derivation site: init_mlp (builds params) and mlp_sparse_metas
+# (re-derives static metas at apply time) must agree or the apply path
+# would dispatch on stats of a structure the params don't have.
+MLP_SEED_BASE = 7919
+
+
+def mlp_seed(seed_hint: int) -> int:
+    """Pattern seed of ``init_mlp(..., seed_hint=...)``'s gate weight (up
+    uses ``+1``, down ``+2``)."""
+    return MLP_SEED_BASE * (seed_hint + 1)
+
+
 def init_mlp(cfg, key, dtype, d_ff=None, seed_hint: int = 0):
     d, f = cfg.d_model, d_ff or cfg.d_ff
     if cfg.ffn_sparsity is not None:
@@ -323,8 +337,9 @@ def init_mlp(cfg, key, dtype, d_ff=None, seed_hint: int = 0):
         # ``reorder`` scheme is applied here too (block-row granularity,
         # so every layer keeps the same nnzb and the stack still scans);
         # apply_sparse_linear sees it via the row_perm/inv_perm leaves and
-        # the spec-derived meta, and un-permutes outputs transparently.
-        seed = 7919 * (seed_hint + 1)
+        # the static metas mlp() re-derives, and un-permutes outputs
+        # transparently.
+        seed = mlp_seed(seed_hint)
         gate, _ = init_sparse_linear(seed, d, f, cfg.ffn_sparsity, dtype)
         up, _ = init_sparse_linear(seed + 1, d, f, cfg.ffn_sparsity, dtype)
         down, _ = init_sparse_linear(seed + 2, f, d, cfg.ffn_sparsity, dtype)
@@ -337,13 +352,46 @@ def init_mlp(cfg, key, dtype, d_ff=None, seed_hint: int = 0):
     }
 
 
-def mlp(cfg, p, x, d_ff=None):
+@functools.lru_cache(maxsize=None)
+def mlp_sparse_metas(spec, d: int, f: int, seed_hints: tuple):
+    """TRUE structure metas of a (possibly scan-stacked) sparse MLP.
+
+    ``seed_hints`` are the ``init_mlp`` seed hints of every layer sharing
+    the traced body (one hint for an unstacked block, ``range(n_layers)``
+    for the transformer's scanned stack).  Per-layer metas are re-derived
+    from the deterministic pattern seeds (``sparse_linear_meta`` — real
+    ``max_bpr``/padding/skew, per-shard ``ShardedMeta`` stats) and merged
+    conservatively (``merge_sparse_metas``: stats take the stack max, so
+    one static meta is correct for every layer the scan applies).  Gate
+    and up share dims ``d -> f`` and both fold into ``meta_in``; down is
+    ``f -> d`` (``meta_out``).  Returns ``(meta_in, meta_out)`` —
+    hashable STATIC aux data, never pytree leaves."""
+    metas_in, metas_out = [], []
+    for hint in seed_hints:
+        seed = mlp_seed(hint)
+        metas_in.append(sparse_linear_meta(seed, d, f, spec))        # gate
+        metas_in.append(sparse_linear_meta(seed + 1, d, f, spec))    # up
+        metas_out.append(sparse_linear_meta(seed + 2, f, d, spec))   # down
+    return merge_sparse_metas(metas_in), merge_sparse_metas(metas_out)
+
+
+def mlp(cfg, p, x, d_ff=None, seed_hints=(0,)):
+    """Gated MLP (dense, or block-sparse when ``cfg.ffn_sparsity`` is set
+    AND ``p`` holds sparse params).
+
+    The sparse path dispatches on the static metas of the structures
+    ``init_mlp`` actually built: pass the same ``seed_hints`` the params
+    were initialized with (every hint sharing this traced body — the
+    layer-scan callers in ``models.transformer`` pass the whole stack's
+    hints).  That is what gives the model path heterogeneous per-shard
+    autotune picks and real ``row_loop`` schedule bounds instead of the
+    dims-only collapse."""
     act = jax.nn.silu if cfg.mlp_act == "silu" else \
         functools.partial(jax.nn.gelu, approximate=True)
-    if cfg.ffn_sparsity is not None:
+    if cfg.ffn_sparsity is not None and "gate" in p:
         d, f = cfg.d_model, d_ff or cfg.d_ff
-        _, meta_in = sparse_linear_specs(d, f, cfg.ffn_sparsity)
-        _, meta_out = sparse_linear_specs(f, d, cfg.ffn_sparsity)
+        meta_in, meta_out = mlp_sparse_metas(cfg.ffn_sparsity, d, f,
+                                             tuple(seed_hints))
         g = apply_sparse_linear(p["gate"], meta_in, x, cfg.ffn_sparsity)
         u = apply_sparse_linear(p["up"], meta_in, x, cfg.ffn_sparsity)
         return apply_sparse_linear(p["down"], meta_out, act(g) * u,

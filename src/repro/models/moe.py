@@ -164,5 +164,8 @@ def moe_ffn(cfg, p, x, dispatch: str = "gather"
     if cfg.n_shared_experts:
         Bt, L, D = x.shape
         fs = cfg.expert_d_ff * cfg.n_shared_experts
+        # shared experts are initialized DENSE (init_moe above) regardless
+        # of cfg.ffn_sparsity; mlp() dispatches on the params' structure,
+        # so this stays the dense einsum path even for sparse-FFN archs
         y = y + mlp(cfg, p["shared"], x, d_ff=fs)
     return y, aux

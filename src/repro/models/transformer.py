@@ -66,6 +66,17 @@ def _init_block(cfg: ModelConfig, key, dtype, seed_hint: int = 0):
     raise ValueError(cfg.layout)
 
 
+def _mlp_seed_hints(cfg: ModelConfig):
+    """``init_mlp`` seed hints of every sparse-FFN layer sharing the scanned
+    block body — the static aux data ``L.mlp`` re-derives its structure
+    metas from.  ``attn_mlp`` stacks init with ``seed_hint=i`` (see
+    ``init_params``); every other layout inits its mlps with the default
+    hint 0."""
+    if cfg.layout == "attn_mlp":
+        return tuple(range(_n_repeats(cfg)))
+    return (0,)
+
+
 def _apply_block(cfg: ModelConfig, p, x, cache, pos):
     """Returns (x, new_cache, aux)."""
     from repro.launch.constrain import BATCH, MODEL, constrain
@@ -78,7 +89,8 @@ def _apply_block(cfg: ModelConfig, p, x, cache, pos):
         a, c = L.attention(cfg, p["attn"], L.rms_norm(x, p["ln1"]),
                            window=cfg.sliding_window, cache=cache, pos=pos)
         x = x + a
-        x = x + L.mlp(cfg, p["mlp"], L.rms_norm(x, p["ln2"]))
+        x = x + L.mlp(cfg, p["mlp"], L.rms_norm(x, p["ln2"]),
+                      seed_hints=_mlp_seed_hints(cfg))
         return x, c, aux
     if cfg.layout == "gemma_pair":
         caches = cache or {"local": None, "global": None}
@@ -88,7 +100,8 @@ def _apply_block(cfg: ModelConfig, p, x, cache, pos):
             a, c = L.attention(cfg, h["attn"], L.rms_norm(x, h["ln1"]),
                                window=window, cache=caches[kind], pos=pos)
             x = x + L.rms_norm(a, h["ln1_post"])
-            m = L.mlp(cfg, h["mlp"], L.rms_norm(x, h["ln2"]))
+            m = L.mlp(cfg, h["mlp"], L.rms_norm(x, h["ln2"]),
+                      seed_hints=_mlp_seed_hints(cfg))
             x = x + L.rms_norm(m, h["ln2_post"])
             new_c[kind] = c
         return x, (new_c if cache is not None else None), aux

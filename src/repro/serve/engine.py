@@ -66,7 +66,13 @@ class ServeEngine:
         sparse-FFN path (``SparsitySpec(shards=...)``).  When set, decode
         traces run under ``dist_spmm.use_spmm_mesh`` so every sparse layer
         executes as a shard_map over it; when None, sharded layers fall
-        back to the in-process equivalent (identical math)."""
+        back to the in-process equivalent (identical math).
+
+        Sparse layers dispatch on the static structure metas the model
+        path re-derives per trace (``models.layers.mlp_sparse_metas`` —
+        real per-shard stats), so decode gets the same heterogeneous
+        per-shard kernel picks as the raw ``dist_spmm`` API; warm the
+        autotune cache across processes with ``REPRO_AUTOTUNE_CACHE``."""
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
