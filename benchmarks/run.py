@@ -4,23 +4,27 @@ CI suite mode (the single entrypoint the ``benchmark-smoke`` job runs):
 
   python benchmarks/run.py --smoke --diff-all
 
-runs every gated benchmark (autotune, reorder, shard_scaling), writes one
-``BENCH_<name>.json`` each (a single combined artifact for CI), diffs each
-against its committed ``benchmarks/BENCH_<name>.baseline.json``, and exits
-nonzero if ANY diff fails.  Refresh a baseline with the individual
-module's ``--out benchmarks/BENCH_<name>.baseline.json``.
+runs every gated benchmark (autotune, reorder, shard_scaling, sddmm),
+writes one ``BENCH_<name>.json`` each (a single combined artifact for CI),
+diffs each against its committed ``benchmarks/BENCH_<name>.baseline.json``,
+and exits nonzero if ANY diff fails.  Refresh a baseline with the
+individual module's ``--out benchmarks/BENCH_<name>.baseline.json``.
 
-Figure mode (legacy, no flags): one module per paper table/figure —
+Figure mode (``--figures [name,...]``, or legacy no flags = all): one
+module per paper table/figure —
 
-  fig2   — perf model T_tot = T_e*n_e + T_init fit (paper Fig. 2 / SIII)
-  fig3   — reordering block-count + load-balance effect (Figs. 3-4 / SVI-A)
-  fig8   — SuiteSparse-pattern suite throughput (Fig. 8 / Table I / SVI-B)
-  fig9   — band sparsity sweep, dense crossover (Fig. 9 / SVI-C)
-  fig10  — N scaling (Fig. 10 / SVI-D)
-  kernel — Pallas kernel roofline table + dc2 schedule study
+  bench_perf_model       — T_tot = T_e*n_e + T_init fit (Fig. 2 / SIII)
+  bench_reorder          — reordering block-count effect (Figs. 3-4 / SVI-A)
+  bench_suitesparse_like — SuiteSparse-pattern throughput (Fig. 8 / SVI-B)
+  bench_band_sweep       — band sparsity sweep, dense crossover (Fig. 9)
+  bench_n_scaling        — N scaling (Fig. 10 / SVI-D)
+  bench_kernels          — Pallas kernel roofline table + dc2 study
 
-Prints ``name,us_per_call,derived`` CSV.  Roofline tables for the 40
-(arch x shape) cells come from ``repro.launch.dryrun`` (see EXPERIMENTS.md).
+Prints ``name,us_per_call,derived`` CSV.  These are slower, report-only
+paper figures — CI runs the gated suite; ``tests/test_system.py`` keeps
+the figure modules importable so they cannot silently rot.  Roofline
+tables for the (arch x shape) cells come from ``repro.launch.dryrun``
+(see its --out JSON + ``benchmarks/compare_sweeps.py`` for A/B tables).
 """
 from __future__ import annotations
 
@@ -41,7 +45,12 @@ SUITE = (
     ("bench_autotune", "BENCH_autotune.baseline.json"),
     ("bench_reorder", "BENCH_reorder.baseline.json"),
     ("bench_shard_scaling", "BENCH_shard_scaling.baseline.json"),
+    ("bench_sddmm", "BENCH_sddmm.baseline.json"),
 )
+
+# report-only paper-figure modules (never gated; run via --figures)
+FIGURES = ("bench_perf_model", "bench_reorder", "bench_suitesparse_like",
+           "bench_band_sweep", "bench_n_scaling", "bench_kernels")
 
 
 def run_suite(smoke: bool, diff_all: bool, out_dir: str = ".") -> int:
@@ -64,16 +73,17 @@ def run_suite(smoke: bool, diff_all: bool, out_dir: str = ".") -> int:
     return rc
 
 
-def run_figures() -> None:
-    from benchmarks import (bench_band_sweep, bench_kernels,
-                            bench_n_scaling, bench_perf_model,
-                            bench_reorder, bench_suitesparse_like)
+def run_figures(names=None) -> None:
+    import importlib
+    names = tuple(names or FIGURES)
+    bad = [n for n in names if n not in FIGURES]
+    if bad:  # validate up front — these modules run for minutes each
+        raise SystemExit(f"unknown figure module(s) {bad}; "
+                         f"pick from {FIGURES}")
     t0 = time.time()
-    for mod in (bench_perf_model, bench_reorder, bench_suitesparse_like,
-                bench_band_sweep, bench_n_scaling, bench_kernels):
-        name = mod.__name__.split(".")[-1]
+    for name in names:
         print(f"# === {name} ===", file=sys.stderr)
-        mod.run()
+        importlib.import_module(f"benchmarks.{name}").run()
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
 
 
@@ -88,8 +98,15 @@ def main() -> int:
                          "baseline; exit nonzero on any regression")
     ap.add_argument("--out-dir", default=".",
                     help="where suite mode writes BENCH_*.json")
+    ap.add_argument("--figures", nargs="*", default=None,
+                    help="run the (report-only) paper-figure modules; "
+                         "optionally name a subset, e.g. "
+                         "--figures bench_kernels")
     args = ap.parse_args()
 
+    if args.figures is not None:
+        run_figures(args.figures or None)
+        return 0
     if args.smoke or args.full or args.diff_all:
         return run_suite(smoke=not args.full, diff_all=args.diff_all,
                          out_dir=args.out_dir)

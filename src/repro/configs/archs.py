@@ -9,6 +9,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.configs.base import ModelConfig
+from repro.core.attention_mask import AttnSparsitySpec, banded
 from repro.core.sparse_linear import SparsitySpec
 
 
@@ -117,6 +118,22 @@ _register(ModelConfig(
     ffn_sparsity=SparsitySpec(density=0.10, block=(128, 128), backend="xla"),
 ))
 
+# Both sparse workloads at once: block-sparse FFN weights AND block-sparse
+# attention scores (banded mask, SDDMM -> block softmax -> SpMM).  The
+# banded mask bounds the attended window, so this arch qualifies for the
+# 500k decode cell like the SWA archs do.  backend="xla" mirrors the
+# ffn_sparsity spec above: the registered config must stay CPU-lowerable
+# for the whole-fleet dryrun (backend="auto" can resolve to a
+# non-interpret Pallas variant there); flip to "auto" on real TPUs.
+_register(ModelConfig(
+    name="smat-attn-1.3b", family="dense", layout="attn_mlp",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=16, head_dim=128,
+    d_ff=8192, vocab_size=32000,
+    ffn_sparsity=SparsitySpec(density=0.10, block=(128, 128), backend="xla"),
+    attn_sparsity=AttnSparsitySpec(mask=banded(4096), block=(128, 128),
+                                   backend="xla"),
+))
+
 
 # ---------------------------------------------------------------- smoke view
 def smoke_config(cfg: ModelConfig) -> ModelConfig:
@@ -151,5 +168,9 @@ def smoke_config(cfg: ModelConfig) -> ModelConfig:
     if cfg.ffn_sparsity is not None:
         kw.update(ffn_sparsity=SparsitySpec(
             density=0.3, block=(16, 16), backend=cfg.ffn_sparsity.backend,
+            bn=128, interpret=True))
+    if cfg.attn_sparsity is not None:
+        kw.update(attn_sparsity=dataclasses.replace(
+            cfg.attn_sparsity, mask=banded(32), block=(16, 16),
             bn=128, interpret=True))
     return dataclasses.replace(cfg, **kw)

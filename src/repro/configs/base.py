@@ -4,6 +4,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
+from repro.core.attention_mask import AttnSparsitySpec
 from repro.core.sparse_linear import SparsitySpec
 
 
@@ -64,6 +65,11 @@ class ModelConfig:
     # --- the paper's technique: block-sparse FFN weights
     ffn_sparsity: Optional[SparsitySpec] = None
 
+    # --- the paper's second workload: block-sparse attention (scores
+    # sampled on a static BCSR mask via SDDMM -> block softmax -> SpMM;
+    # specs live in core.attention_mask, the layer in models.attention)
+    attn_sparsity: Optional[AttnSparsitySpec] = None
+
     dtype: str = "bfloat16"
     mlp_act: str = "silu"           # silu (gated) | gelu (gated, gemma2)
 
@@ -78,8 +84,13 @@ class ModelConfig:
 
     @property
     def supports_long_context(self) -> bool:
-        """Sub-quadratic sequence mixing: SSM/hybrid state or bounded SWA
-        window (gemma2 counts: half its layers are local; noted in DESIGN)."""
+        """Sub-quadratic sequence mixing: SSM/hybrid state, bounded SWA
+        window (gemma2 counts: half its layers are local), or a bounded
+        block-sparse attention mask (banded / local+global) — see
+        docs/ARCHITECTURE.md "Shape cells & applicability"."""
+        if self.attn_sparsity is not None and \
+                self.attn_sparsity.mask.kind in ("banded", "local_global"):
+            return True
         return self.family in ("ssm", "hybrid") or \
             self.sliding_window is not None
 
@@ -184,8 +195,9 @@ SHAPES = {
 
 def cell_applicable(cfg: ModelConfig, shape: ShapeCell) -> Tuple[bool, str]:
     """(runs?, reason) — long_500k skips pure full-attention archs
-    (DESIGN.md §Shape cells)."""
+    (see docs/ARCHITECTURE.md "Shape cells & applicability")."""
     if shape.name == "long_500k" and not cfg.supports_long_context:
         return False, ("pure full-attention arch: 500k decode requires "
-                       "sub-quadratic sequence mixing (noted in DESIGN.md)")
+                       "sub-quadratic sequence mixing (see "
+                       "docs/ARCHITECTURE.md)")
     return True, ""

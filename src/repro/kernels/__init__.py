@@ -1,10 +1,13 @@
-"""SpMM kernel package.
+"""SpMM/SDDMM kernel package.
 
-  bcsr_spmm — Pallas TPU kernels (nnz_stream / row_loop / sddmm)
-  ref       — pure-jnp oracles (the ``xla`` backend)
-  ops       — jit-ready public API (``spmm`` with custom VJP + dispatch)
-  autotune  — kernel-variant registry + fingerprint-cached autotuner
-              (``ops.spmm(..., backend="auto")`` routes through it)
+  bcsr_spmm — Pallas TPU kernels (nnz_stream / row_loop / sddmm /
+              sddmm_row_loop)
+  ref       — pure-jnp oracles (the ``xla`` backend, dense-masked sddmm)
+  ops       — jit-ready public API (``spmm`` + ``sddmm``, mutually-dual
+              custom VJPs + dispatch)
+  autotune  — kernel-variant registry (spmm + sddmm families) +
+              fingerprint-cached autotuner (v5 ``op=``-scoped keys;
+              ``backend="auto"`` routes through it)
 """
 from repro.kernels import ops
-from repro.kernels.ops import prepare_sparse, spmm
+from repro.kernels.ops import prepare_sparse, sddmm, spmm

@@ -49,12 +49,14 @@ _VMEM_BUDGET = 8 * 2 ** 20
 # ------------------------------------------------------------------ registry
 @dataclasses.dataclass(frozen=True)
 class KernelVariant:
-    """One dispatchable SpMM schedule.
+    """One dispatchable kernel schedule.
 
-    ``backend`` is the ``ops.SpmmConfig.backend`` string the variant lowers
-    to; ``model_time`` maps (meta, n, bn) -> predicted seconds (paper Eq. 1
-    terms from ``core.perf_model``); ``supported`` gates dispatch on static
-    metadata (e.g. row_loop needs a known max_bpr).
+    ``op`` names the compute family the variant belongs to (``"spmm"`` |
+    ``"sddmm"`` — picks never cross families); ``backend`` is the
+    ``ops.SpmmConfig.backend`` string the variant lowers to; ``model_time``
+    maps (meta, n, bn) -> predicted seconds (paper Eq. 1 terms from
+    ``core.perf_model``); ``supported`` gates dispatch on static metadata
+    (e.g. row_loop needs a known max_bpr).
     """
     name: str
     backend: str
@@ -62,6 +64,7 @@ class KernelVariant:
     model_time: Callable[[ops.SparseMeta, int, int], float]
     supported: Callable[[ops.SparseMeta], bool] = lambda meta: True
     description: str = ""
+    op: str = "spmm"
 
 
 _REGISTRY: Dict[str, KernelVariant] = {}
@@ -78,8 +81,10 @@ def get_variant(name: str) -> KernelVariant:
     return _REGISTRY[name]
 
 
-def variant_names() -> Tuple[str, ...]:
-    return tuple(_REGISTRY)
+def variant_names(op: str = "spmm") -> Tuple[str, ...]:
+    """Registered variant names of one compute family (``op=None`` lists
+    every family)."""
+    return tuple(n for n, v in _REGISTRY.items() if op is None or v.op == op)
 
 
 def _bytes_per_el(dtype=jnp.bfloat16) -> int:
@@ -134,6 +139,53 @@ register_variant(KernelVariant(
     description="materialized dense GEMM (cuBLAS arm; wins at high density)"))
 
 
+# SDDMM family (ops.sddmm): X @ Y^T sampled at the stored blocks.  The
+# contraction runs over N (the bn-tiled axis), so the per-block elementary
+# cost matches the SpMM block roofline with the same (h, w, bn) tile.
+def _t_sddmm_stream(meta: ops.SparseMeta, n: int, bn: int) -> float:
+    h, w = meta.block
+    return pm.spmm_model_time(meta.nnzb * _n_tiles(n, bn), h, w, bn)
+
+
+def _t_sddmm_row_loop(meta: ops.SparseMeta, n: int, bn: int) -> float:
+    # static schedule: every (block-row, slot) pair pays its product, even
+    # the padding slots that land in the sentinel output block
+    h, w = meta.block
+    n_e = meta.n_block_rows * max(meta.max_bpr, 1) * _n_tiles(n, bn)
+    return pm.spmm_model_time(n_e, h, w, bn)
+
+
+def _t_sddmm_xla(meta: ops.SparseMeta, n: int, bn: int) -> float:
+    h, w = meta.block
+    return pm.csr_spmm_time(meta.nnzb * h * w, n, gather_overhead=2.0)
+
+
+def _t_sddmm_dense(meta: ops.SparseMeta, n: int, bn: int) -> float:
+    # the full M x K product, then a block gather (charged as output reread)
+    h, w = meta.block
+    return pm.dense_gemm_time(meta.n_block_rows * h, n,
+                              meta.n_block_cols * w)
+
+
+register_variant(KernelVariant(
+    name="sddmm_stream", backend="pallas", op="sddmm",
+    bn_candidates=(128, 256, 512, 1024), model_time=_t_sddmm_stream,
+    description="nonzero-block-streamed Pallas SDDMM (skew-immune)"))
+register_variant(KernelVariant(
+    name="sddmm_row_loop", backend="row_loop", op="sddmm",
+    bn_candidates=(128, 256, 512), model_time=_t_sddmm_row_loop,
+    supported=lambda meta: meta.max_bpr > 0,
+    description="paper-faithful static (block-row x slot) SDDMM schedule"))
+register_variant(KernelVariant(
+    name="sddmm_xla", backend="xla", op="sddmm",
+    bn_candidates=(512,), model_time=_t_sddmm_xla,
+    description="pure-jnp gather/einsum SDDMM (shardable oracle path)"))
+register_variant(KernelVariant(
+    name="sddmm_dense", backend="dense", op="sddmm",
+    bn_candidates=(512,), model_time=_t_sddmm_dense,
+    description="dense-masked X Y^T + block gather (near-dense structures)"))
+
+
 # --------------------------------------------------------------- fingerprint
 def _pow2_bucket(x: int) -> int:
     return 1 << max(int(x) - 1, 0).bit_length() if x > 0 else 0
@@ -154,7 +206,11 @@ class Fingerprint:
     ``row_loop`` schedule bound EXACTLY (not bucketed): reordering shrinks
     it, the static schedule length is ``n_block_rows * max_bpr``, and two
     structures whose other stats coincide but whose schedule bounds differ
-    must never share a cached ``row_loop`` decision."""
+    must never share a cached ``row_loop`` decision.  ``op`` (v5) names
+    the compute family: ``ops.spmm`` and ``ops.sddmm`` dispatch over the
+    SAME structures with different optimal schedules (SDDMM contracts
+    over the bn-tiled N axis instead of streaming it), so their picks
+    must never alias."""
     n_block_rows: int
     n_block_cols: int
     block: Tuple[int, int]
@@ -165,10 +221,12 @@ class Fingerprint:
     reorder: str = "identity"
     n_shards: int = 1    # shard count of the partitioned operand (1 = whole)
     max_bpr: int = 0     # row_loop schedule bound (0 = unknown/dims-only)
+    op: str = "spmm"     # compute family (spmm | sddmm)
 
     def key(self) -> str:
         h, w = self.block
-        return (f"v4|nbr={self.n_block_rows}|nbc={self.n_block_cols}"
+        return (f"v5|op={self.op}"
+                f"|nbr={self.n_block_rows}|nbc={self.n_block_cols}"
                 f"|b={h}x{w}|nnzb={self.nnzb}|pad={self.pad_bucket}"
                 f"|skew={self.skew_bucket}|n={self.n_bucket}"
                 f"|ro={self.reorder}|ns={self.n_shards}|mb={self.max_bpr}")
@@ -177,29 +235,33 @@ class Fingerprint:
 def _make_fingerprint(nbr: int, nbc: int, block, nnzb: int,
                       pad_pct: int, cv_pct: int, n: int,
                       reorder: str = "identity",
-                      n_shards: int = 1, max_bpr: int = 0) -> Fingerprint:
+                      n_shards: int = 1, max_bpr: int = 0,
+                      op: str = "spmm") -> Fingerprint:
     """Single bucketing site for both fingerprint paths — the meta-side and
     BCSR-side keys must agree bit-for-bit or cached picks stop matching."""
     return Fingerprint(
         n_block_rows=nbr, n_block_cols=nbc, block=tuple(block), nnzb=nnzb,
         pad_bucket=pad_pct // 10, skew_bucket=cv_pct // 25,
         n_bucket=_pow2_bucket(n), reorder=reorder, n_shards=n_shards,
-        max_bpr=max_bpr)
+        max_bpr=max_bpr, op=op)
 
 
-def fingerprint(meta: ops.SparseMeta, n: int) -> Fingerprint:
+def fingerprint(meta: ops.SparseMeta, n: int,
+                op: str = "spmm") -> Fingerprint:
     """Fingerprint from the static meta ``prepare_sparse`` built (or a
     per-shard meta from ``dist_spmm.prepare_sharded`` — its ``n_shards``
-    and ``max_bpr`` ride into the v4 key)."""
+    and ``max_bpr`` ride into the v5 key).  ``op`` selects the compute
+    family's key space (``spmm`` | ``sddmm``)."""
     return _make_fingerprint(meta.n_block_rows, meta.n_block_cols,
                              meta.block, meta.nnzb,
                              meta.padding_ratio_pct, meta.bpr_cv_pct, n,
                              reorder=meta.reorder, n_shards=meta.n_shards,
-                             max_bpr=meta.max_bpr)
+                             max_bpr=meta.max_bpr, op=op)
 
 
 def fingerprint_bcsr(a: bcsr_lib.BCSR, n: int,
-                     reorder: str = "identity") -> Fingerprint:
+                     reorder: str = "identity",
+                     op: str = "spmm") -> Fingerprint:
     """Fingerprint from a host BCSR — matches ``fingerprint`` of the meta
     ``prepare_sparse`` would build (same row padding applied first; both
     sides go through ``BCSR.dispatch_stats`` + ``_make_fingerprint``).
@@ -210,7 +272,7 @@ def fingerprint_bcsr(a: bcsr_lib.BCSR, n: int,
     max_bpr, pad_pct, cv_pct = a_p.dispatch_stats()
     return _make_fingerprint(a_p.n_block_rows, a_p.n_block_cols, a_p.block,
                              a_p.nnzb, pad_pct, cv_pct, n, reorder=reorder,
-                             max_bpr=max_bpr)
+                             max_bpr=max_bpr, op=op)
 
 
 # -------------------------------------------------------------------- choice
@@ -235,8 +297,14 @@ class KernelChoice:
                             predicted_us=float(d.get("predicted_us", 0.0)))
 
 
-def default_choice() -> KernelChoice:
-    return KernelChoice(DEFAULT_VARIANT, DEFAULT_BN, source="default")
+def default_variant(op: str = "spmm") -> str:
+    """The hardcoded pre-registry default of one compute family — the
+    baseline every pick must beat."""
+    return DEFAULT_VARIANT if op == "spmm" else "sddmm_stream"
+
+
+def default_choice(op: str = "spmm") -> KernelChoice:
+    return KernelChoice(default_variant(op), DEFAULT_BN, source="default")
 
 
 def pick_bn(meta: ops.SparseMeta, n: int,
@@ -256,18 +324,20 @@ def pick_bn(meta: ops.SparseMeta, n: int,
     return max(fit_n or feasible)
 
 
-def analytic_choice(meta: ops.SparseMeta, n: int) -> KernelChoice:
-    """Model-based pick: paper Eq. 1 per variant, minimum predicted time."""
+def analytic_choice(meta: ops.SparseMeta, n: int,
+                    op: str = "spmm") -> KernelChoice:
+    """Model-based pick: paper Eq. 1 per variant of the ``op`` family,
+    minimum predicted time."""
     best: Optional[Tuple[float, str, int]] = None
     for v in _REGISTRY.values():
-        if not v.supported(meta):
+        if v.op != op or not v.supported(meta):
             continue
         bn = pick_bn(meta, n, v.bn_candidates)
         t = float(v.model_time(meta, n, bn))
         if best is None or t < best[0]:
             best = (t, v.name, bn)
     if best is None:  # every variant gated off — keep the hardcoded default
-        return default_choice()
+        return default_choice(op)
     t, name, bn = best
     return KernelChoice(name, bn, source="analytic", predicted_us=t * 1e6)
 
@@ -347,14 +417,17 @@ class Autotuner:
     def __len__(self) -> int:
         return len(self._mem)
 
-    def pick(self, meta: ops.SparseMeta, n: int) -> KernelChoice:
+    def pick(self, meta: ops.SparseMeta, n: int,
+             op: str = "spmm") -> KernelChoice:
         """Cached choice for this structure, analytic on a miss.  Static
-        info only — safe inside jit traces (``backend="auto"`` path)."""
-        fp = fingerprint(meta, n)
+        info only — safe inside jit traces (``backend="auto"`` path).
+        ``op`` selects the variant family (``spmm`` | ``sddmm``) and its
+        disjoint v5 key space."""
+        fp = fingerprint(meta, n, op=op)
         hit = self.get(fp)
         if hit is not None:
             return hit
-        choice = analytic_choice(meta, n)
+        choice = analytic_choice(meta, n, op=op)
         # cache (no disk write: analytic picks are cheap to recompute and
         # pick() may run inside latency-sensitive first-trace paths)
         self.put(fp, choice, persist=False)
@@ -366,57 +439,79 @@ class Autotuner:
              warmup: int = 1, iters: int = 3, rng_seed: int = 0,
              reorder: str = "identity",
              reorder_granularity: str = "element",
-             n_shards: int = 8) -> Tuple[KernelChoice, Dict[str, float]]:
-        """Timed micro-sweep over registered (variant, bn) candidates.
+             n_shards: int = 8,
+             op: str = "spmm") -> Tuple[KernelChoice, Dict[str, float]]:
+        """Timed micro-sweep over the ``op`` family's (variant, bn)
+        candidates.
 
-        Always measures the hardcoded default (nnz_stream, bn=512) so the
-        winner is never slower than it; returns (choice, {candidate: sec}).
-        The winner is cached (and persisted) under the matrix fingerprint.
+        Always measures the family's hardcoded default (``nnz_stream`` /
+        ``sddmm_stream``, bn=512) so the winner is never slower than it;
+        returns (choice, {candidate: sec}).  The winner is cached (and
+        persisted) under the matrix's v5 ``op=``-scoped fingerprint.
         ``reorder`` mirrors the ``prepare_sparse`` arguments so the sweep
         measures (and the fingerprint matches) the permuted structure the
-        apply path will actually dispatch on.
+        apply path will actually dispatch on.  For ``op="sddmm"`` the
+        timed call is ``ops.sddmm(arrays, meta, x, y)`` with dense
+        operands ``x [M, n]`` / ``y [K, n]`` (n = the contraction width).
         """
         arrays, meta = ops.prepare_sparse(
             a, dtype=dtype, reorder=reorder,
             reorder_granularity=reorder_granularity, n_shards=n_shards)
-        fp = fingerprint(meta, n)
+        fp = fingerprint(meta, n, op=op)
         rng = np.random.default_rng(rng_seed)
-        b = jnp.asarray(rng.standard_normal((meta.shape[1], n)), dtype=dtype)
+        if op == "sddmm":
+            x = jnp.asarray(rng.standard_normal((meta.shape[0], n)),
+                            dtype=dtype)
+            y = jnp.asarray(rng.standard_normal((meta.shape[1], n)),
+                            dtype=dtype)
 
-        names = tuple(variants) if variants else variant_names()
+            def _mk_fn(backend, bn):
+                return jax.jit(lambda xx, yy: ops.sddmm(
+                    arrays, meta, xx, yy, backend=backend, bn=bn,
+                    interpret=interpret))
+            operands = (x, y)
+        else:
+            b = jnp.asarray(rng.standard_normal((meta.shape[1], n)),
+                            dtype=dtype)
+
+            def _mk_fn(backend, bn):
+                return jax.jit(lambda bb: ops.spmm(
+                    arrays, meta, bb, backend=backend, bn=bn,
+                    interpret=interpret))
+            operands = (b,)
+
+        names = tuple(variants) if variants else variant_names(op)
         cand: Dict[str, Tuple[str, int]] = {}
         for name in names:
             v = get_variant(name)
-            if not v.supported(meta):
+            if v.op != op or not v.supported(meta):
                 continue
             bns = {pick_bn(meta, n, v.bn_candidates)}
             bns.update(bn for bn in v.bn_candidates if bn <= max(n, 128))
             for bn in sorted(bns):
                 cand[f"{name}/bn{bn}"] = (name, bn)
-        cand.setdefault(f"{DEFAULT_VARIANT}/bn{DEFAULT_BN}",
-                        (DEFAULT_VARIANT, DEFAULT_BN))
+        dv = default_variant(op)
+        cand.setdefault(f"{dv}/bn{DEFAULT_BN}", (dv, DEFAULT_BN))
 
         timings: Dict[str, float] = {}
         for label, (name, bn) in cand.items():
-            backend = get_variant(name).backend
-            fn = jax.jit(lambda bb, _be=backend, _bn=bn: ops.spmm(
-                arrays, meta, bb, backend=_be, bn=_bn, interpret=interpret))
+            fn = _mk_fn(get_variant(name).backend, bn)
             try:
-                jax.block_until_ready(fn(b))
+                jax.block_until_ready(fn(*operands))
                 for _ in range(max(warmup - 1, 0)):
-                    jax.block_until_ready(fn(b))
+                    jax.block_until_ready(fn(*operands))
                 ts = []
                 for _ in range(iters):
                     t0 = time.perf_counter()
-                    jax.block_until_ready(fn(b))
+                    jax.block_until_ready(fn(*operands))
                     ts.append(time.perf_counter() - t0)
                 timings[label] = float(np.median(ts))
             except Exception:  # variant not runnable here — skip, don't die
                 continue
 
-        default_label = f"{DEFAULT_VARIANT}/bn{DEFAULT_BN}"
+        default_label = f"{dv}/bn{DEFAULT_BN}"
         if not timings:
-            choice = default_choice()
+            choice = default_choice(op)
         else:
             best_label = min(timings, key=timings.get)
             # prefer the default on a tie within noise (2%)

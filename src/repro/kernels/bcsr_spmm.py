@@ -1,6 +1,6 @@
 """Pallas TPU kernels for BCSR SpMM — the paper's contribution, MXU-native.
 
-Three kernels:
+Four kernels:
 
   * ``bcsr_spmm_nnz_stream``  — production forward. The grid streams the
     *nonzero-block list* (beyond-paper: zero pipeline bubbles regardless of
@@ -16,14 +16,22 @@ Three kernels:
     2D schedule (wasted iterations on short rows; used as the faithful
     baseline in benchmarks).
 
-  * ``bcsr_sddmm``            — block-sampled dense-dense product for the
-    backward pass (dW of a sparse weight).
+  * ``bcsr_sddmm``            — block-sampled dense-dense product
+    (``X @ Y^T`` evaluated only at the stored blocks), streamed over the
+    nonzero-block list.  It is both the backward pass of SpMM (dW of a
+    sparse weight) and, since PR 5, the forward of the public
+    ``ops.sddmm`` — the score kernel of block-sparse attention.
+
+  * ``bcsr_sddmm_row_loop``   — the paper-faithful static-schedule SDDMM
+    twin: one grid cell per (block-row x slot x N-tile), looping to
+    ``max_blocks_per_row``; padding slots write into a sentinel output
+    block (SMaT's static waste, mirrored from the SpMM ``row_loop``).
 
 Blocks are ``(h, w)`` with ``h`` a sublane multiple (8 f32 / 16 bf16) and
 ``w`` a lane multiple (128) on real TPUs; ``interpret=True`` (CPU CI) accepts
 any shape.  All kernels accumulate in f32 VMEM scratch regardless of input
 dtype (MXU-native mixed precision; the paper uses fp16-in/fp16-out on TC —
-documented deviation, see DESIGN.md §8).
+documented deviation, see docs/ARCHITECTURE.md "Mixed-precision contract").
 """
 from __future__ import annotations
 
@@ -213,3 +221,74 @@ def bcsr_sddmm(dc: jnp.ndarray, b: jnp.ndarray, row_ids: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((nnzb, h, w), out_dtype),
         interpret=interpret,
     )(row_ids, col_ids, dc, b)
+
+
+# ========================================================== SDDMM (row-loop)
+def _sddmm_row_loop_kernel(idx_ref, col_ref, dc_ref, b_ref, dv_ref, acc_ref,
+                           *, n_tiles: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # [h, bn] x [w, bn]^T -> [h, w]
+    acc_ref[...] += jax.lax.dot_general(
+        dc_ref[...], b_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_tiles - 1)
+    def _flush():
+        dv_ref[0] = acc_ref[...].astype(dv_ref.dtype)
+
+
+def bcsr_sddmm_row_loop(dc: jnp.ndarray, b: jnp.ndarray,
+                        flat_idx: jnp.ndarray, flat_col: jnp.ndarray,
+                        n_block_rows: int, nnzb: int, h: int, w: int, *,
+                        bn: int = 512, out_dtype=None,
+                        interpret: bool = False):
+    """Static-schedule SDDMM: the 2D (block-row x slot) grid of
+    ``bcsr_spmm_row_loop``, sampling ``dC @ B^T`` at the stored blocks.
+
+    flat_idx [nbr*max_bpr]  OUTPUT entry per (row, slot); padding slots
+                            point at the sentinel entry ``nnzb`` (their
+                            product is computed and discarded — faithful
+                            static waste on short rows).
+    flat_col [nbr*max_bpr]  block-col per (row, slot) (padding -> 0)
+
+    Returns ``[nnzb, h, w]`` (the sentinel row is sliced off).
+    """
+    M, N = dc.shape
+    K, _ = b.shape
+    assert M % h == 0 and K % w == 0
+    bn = min(bn, N)
+    assert N % bn == 0
+    out_dtype = out_dtype or dc.dtype
+    max_bpr = flat_idx.shape[0] // n_block_rows
+    n_tiles = N // bn
+    grid = (n_block_rows, max_bpr, n_tiles)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((h, bn),
+                         lambda i, t, j, idx_ref, col_ref: (i, j)),
+            pl.BlockSpec((w, bn),
+                         lambda i, t, j, idx_ref, col_ref:
+                         (col_ref[i * max_bpr + t], j)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, h, w), lambda i, t, j, idx_ref, col_ref:
+            (idx_ref[i * max_bpr + t], 0, 0)),
+        scratch_shapes=[pltpu.VMEM((h, w), jnp.float32)],
+    )
+    kernel = functools.partial(_sddmm_row_loop_kernel, n_tiles=n_tiles)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nnzb + 1, h, w), out_dtype),
+        interpret=interpret,
+    )(flat_idx, flat_col, dc, b)
+    return out[:nnzb]

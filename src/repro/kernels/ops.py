@@ -264,6 +264,26 @@ def _pad_b(b: jnp.ndarray, w: int, bn: int):
     return b, N
 
 
+def _sddmm_row_loop_schedule(row_ids: jnp.ndarray, col_ids: jnp.ndarray,
+                             n_block_rows: int, max_bpr: int):
+    """Traced (flat_idx, flat_col) for the static-schedule SDDMM kernel:
+    per (row, slot), the OUTPUT entry index and block-col.  Padding slots
+    point at the sentinel entry ``nnzb`` (the kernel computes and discards
+    their product — the static waste the ``row_loop`` family pays)."""
+    nnzb = row_ids.shape[0]
+    ones = jnp.ones((nnzb,), jnp.int32)
+    row_len = jax.ops.segment_sum(ones, row_ids, num_segments=n_block_rows)
+    rowptr = jnp.concatenate([jnp.zeros((1,), row_len.dtype),
+                              jnp.cumsum(row_len)])
+    slot = jnp.arange(nnzb, dtype=jnp.int32) - rowptr[row_ids].astype(jnp.int32)
+    pos = row_ids * max_bpr + slot
+    flat_idx = jnp.full((n_block_rows * max_bpr,), nnzb, jnp.int32
+                        ).at[pos].set(jnp.arange(nnzb, dtype=jnp.int32))
+    flat_col = jnp.zeros((n_block_rows * max_bpr,), jnp.int32
+                         ).at[pos].set(col_ids)
+    return flat_idx, flat_col
+
+
 def _row_loop_schedule(row_ids: jnp.ndarray, col_ids: jnp.ndarray,
                        n_block_rows: int, max_bpr: int):
     """Traced (jnp) version of ``make_row_loop_schedule``: builds the padded
@@ -351,25 +371,53 @@ def _dx_impl(cfg: SpmmConfig, meta: SparseMeta, arrays: SparseArrays,
     return out[:K, :N]
 
 
-def _dvals_impl(cfg: SpmmConfig, meta: SparseMeta, arrays: SparseArrays,
-                g: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+def _sddmm_impl(cfg: SpmmConfig, meta: SparseMeta, arrays: SparseArrays,
+                x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """vals[s] = X'[block row_ids[s]] @ Y[block col_ids[s]]^T — the dense
+    pair sampled at the stored structure (X' = P X when the structure was
+    prepared with a reorder; callers pass X in ORIGINAL row order).
+
+    Backends mirror the SpMM family: ``pallas`` streams the nonzero-block
+    list, ``row_loop`` runs the static (block-row x slot) schedule,
+    ``xla`` is the gather/einsum oracle, ``dense`` materializes the full
+    X @ Y^T and gathers blocks.  Padding entries (``real_mask`` False) are
+    zeroed — they are structural, not values."""
     h, w = meta.block
-    bn = _clamp_bn(cfg.bn, max(g.shape[1], b.shape[1]))
-    g_p, _ = _pad_b(g, h, bn)
-    b_p, _ = _pad_b(b, w, bn)
-    n_pad = max(g_p.shape[1], b_p.shape[1])
-    g_p = jnp.pad(g_p, ((0, (-g_p.shape[0]) % h), (0, n_pad - g_p.shape[1])))
-    b_p = jnp.pad(b_p, ((0, 0), (0, n_pad - b_p.shape[1])))
-    if cfg.backend in ("pallas", "row_loop"):
-        dvals = pk.bcsr_sddmm(g_p, b_p, arrays.row_ids, arrays.col_ids,
-                              h, w, bn=min(bn, n_pad),
-                              out_dtype=arrays.vals.dtype,
-                              interpret=cfg.interpret)
+    if meta.reorder != "identity" and arrays.row_perm is not None:
+        x = jnp.take(x, arrays.row_perm, axis=0)
+    out_dtype = jnp.dtype(cfg.out_dtype) if cfg.out_dtype else x.dtype
+    bn = _clamp_bn(cfg.bn, max(x.shape[1], y.shape[1]))
+    x_p, _ = _pad_b(x, h, bn)
+    y_p, _ = _pad_b(y, w, bn)
+    n_pad = max(x_p.shape[1], y_p.shape[1])
+    x_p = jnp.pad(x_p, ((0, 0), (0, n_pad - x_p.shape[1])))
+    y_p = jnp.pad(y_p, ((0, 0), (0, n_pad - y_p.shape[1])))
+    bn = min(bn, n_pad)
+    if cfg.backend == "pallas":
+        vals = pk.bcsr_sddmm(x_p, y_p, arrays.row_ids, arrays.col_ids,
+                             h, w, bn=bn, out_dtype=out_dtype,
+                             interpret=cfg.interpret)
+    elif cfg.backend == "row_loop":
+        if meta.max_bpr <= 0:
+            raise ValueError(
+                "backend='row_loop' needs meta.max_bpr > 0 (metas built by "
+                "prepare_sparse have it; hand-built specs metas do not)")
+        flat_idx, flat_col = _sddmm_row_loop_schedule(
+            arrays.row_ids, arrays.col_ids, meta.n_block_rows, meta.max_bpr)
+        vals = pk.bcsr_sddmm_row_loop(
+            x_p, y_p, flat_idx, flat_col, meta.n_block_rows, meta.nnzb,
+            h, w, bn=bn, out_dtype=out_dtype, interpret=cfg.interpret)
+    elif cfg.backend == "xla":
+        vals = ref.bcsr_sddmm_ref(x_p, y_p, arrays.row_ids, arrays.col_ids,
+                                  h, w, out_dtype=out_dtype)
+    elif cfg.backend == "dense":
+        vals = ref.bcsr_sddmm_dense_ref(x_p, y_p, arrays.row_ids,
+                                        arrays.col_ids, h, w,
+                                        out_dtype=out_dtype)
     else:
-        dvals = ref.bcsr_sddmm_ref(g_p, b_p, arrays.row_ids, arrays.col_ids,
-                                   h, w, out_dtype=arrays.vals.dtype)
-    # padding entries are structural zeros — their gradient is masked
-    return dvals * arrays.real_mask[:, None, None].astype(dvals.dtype)
+        raise ValueError(f"unknown backend {cfg.backend!r}")
+    # padding entries are structural zeros — never values, never gradients
+    return vals * arrays.real_mask[:, None, None].astype(vals.dtype)
 
 
 def materialize_dense(arrays: SparseArrays, meta: SparseMeta) -> jnp.ndarray:
@@ -401,11 +449,14 @@ def _spmm_bwd(cfg, meta, res, g):
     g2 = g.astype(b.dtype)
     if meta.reorder != "identity" and arrays.row_perm is not None:
         # cotangent arrives in ORIGINAL row order; the stored structure is
-        # A' = P A, so both dB = A'^T (P dC) and the SDDMM for dvals need
-        # the permuted cotangent g' = P g
+        # A' = P A, so dB = A'^T (P dC) needs the permuted cotangent
+        # g' = P g (the SDDMM op permutes its X operand itself)
         g2 = jnp.take(g2, arrays.row_perm, axis=0)
     db = _dx_impl(cfg, meta, arrays, g2)[: b.shape[0], : b.shape[1]]
-    dvals = _dvals_impl(cfg, meta, arrays, g2, b)
+    # dvals through the SDDMM op — SpMM and SDDMM are mutual duals, so
+    # higher-order AD recurses between the two custom VJPs
+    cfg_d = dataclasses.replace(cfg, out_dtype=str(vals.dtype))
+    dvals = _sddmm(cfg_d, meta, g.astype(b.dtype), b, rest)
     zeros_rest = jax.tree.map(
         lambda x: np.zeros(x.shape, jax.dtypes.float0), rest)
     return dvals, db.astype(b.dtype), zeros_rest
@@ -414,18 +465,56 @@ def _spmm_bwd(cfg, meta, res, g):
 _spmm.defvjp(_spmm_fwd, _spmm_bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _sddmm(cfg: SpmmConfig, meta: SparseMeta, x: jnp.ndarray,
+           y: jnp.ndarray, rest: tuple) -> jnp.ndarray:
+    arrays = SparseArrays(x, *rest)   # vals slot unused by the sampling
+    return _sddmm_impl(cfg, meta, arrays, x, y)
+
+
+def _sddmm_fwd(cfg, meta, x, y, rest):
+    arrays = SparseArrays(x, *rest)
+    return _sddmm_impl(cfg, meta, arrays, x, y), (x, y, rest)
+
+
+def _sddmm_bwd(cfg, meta, res, g):
+    x, y, rest = res
+    real_mask = rest[2]
+    gm = g * real_mask[:, None, None].astype(g.dtype)
+    cfg_b = dataclasses.replace(cfg, out_dtype=None)
+    # dX = G @ Y — exactly the SpMM forward on the cotangent blocks (the
+    # op un-permutes back to original row order itself); dY = G^T @ X'
+    # via the stored transpose structure, with X' = P X matching the
+    # permuted sampling of the forward
+    dx = _spmm(cfg_b, meta, gm.astype(y.dtype), y, rest)
+    garr = SparseArrays(gm.astype(y.dtype), *rest)
+    xp = x
+    if meta.reorder != "identity" and garr.row_perm is not None:
+        xp = jnp.take(x, garr.row_perm, axis=0)
+    dy = _dx_impl(cfg_b, meta, garr, xp)[: y.shape[0], : y.shape[1]]
+    zeros_rest = jax.tree.map(
+        lambda t: np.zeros(t.shape, jax.dtypes.float0), rest)
+    return dx.astype(x.dtype), dy.astype(y.dtype), zeros_rest
+
+
+_sddmm.defvjp(_sddmm_fwd, _sddmm_bwd)
+
+
 # ------------------------------------------------------------------ public API
 def resolve_backend(backend: str, bn: int, meta: SparseMeta,
-                    n: int) -> Tuple[str, int]:
+                    n: int, op: str = "spmm") -> Tuple[str, int]:
     """Normalize aliases and resolve ``auto`` through the variant registry.
 
     ``auto`` needs only static info (meta + N), so this is safe at trace
     time; a cache miss falls back to the analytic perf-model pick (timed
     sweeps only happen via explicit ``autotune.Autotuner.tune`` calls).
+    ``op`` selects the variant family (``"spmm"`` | ``"sddmm"``) — the two
+    share backend strings but fingerprint separately (v5 ``op=`` field),
+    so an SpMM pick can never alias an SDDMM one.
     """
     if backend == "auto":
         from repro.kernels import autotune  # local import: avoids cycle
-        choice = autotune.get_autotuner().pick(meta, n)
+        choice = autotune.get_autotuner().pick(meta, n, op=op)
         backend, bn = choice.backend, choice.bn
         if backend == "row_loop" and meta.max_bpr <= 0:
             backend = "pallas"  # stale cached pick for a specs meta
@@ -473,9 +562,62 @@ def spmm(arrays: SparseArrays, meta: SparseMeta, b: jnp.ndarray,
     """
     backend, bn = resolve_backend(backend, bn, meta, int(b.shape[-1]))
     cfg = SpmmConfig(backend=backend, bn=bn, interpret=interpret,
-                     out_dtype=str(out_dtype) if out_dtype else None)
+                     out_dtype=str(jnp.dtype(out_dtype))
+                     if out_dtype else None)
     rest = tuple(arrays[1:])
     return _spmm(cfg, meta, arrays.vals, b, rest)
+
+
+def sddmm(arrays: SparseArrays, meta: SparseMeta, x: jnp.ndarray,
+          y: jnp.ndarray, *, backend: str = "pallas", bn: int = 512,
+          interpret: bool = False, out_dtype=None) -> jnp.ndarray:
+    """Sampled dense-dense matmul: the blocks of ``X @ Y^T`` stored by the
+    structure of ``(arrays, meta)`` — SpMM's dual, promoted from the SpMM
+    VJP's private dW helper to a first-class op (the score kernel of
+    block-sparse attention: ``Q K^T`` sampled on a BCSR mask).
+
+    ``X`` is ``[M, N]`` (original row order — a reorder baked into the
+    structure is applied internally, mirroring ``spmm``), ``Y`` is
+    ``[K, N]``; the result is ``[nnzb, h, w]`` with padding entries
+    (``real_mask`` False) zeroed.  Differentiable w.r.t. ``x`` and ``y``:
+    dX runs as an SpMM of the cotangent blocks against ``Y``, dY as an
+    SpMM through the stored transpose structure — the two ops are
+    mutually recursive duals, so higher-order AD bounces between their
+    custom VJPs (to any order on the pure-jnp ``xla`` backend; the
+    Pallas leaf kernels have no JVP rule, capping the order there).
+    ``backend="auto"`` resolves through the
+    ``repro.kernels.autotune`` SDDMM variant family (v5 ``op=sddmm``
+    fingerprints — never aliased with SpMM picks).
+
+    Example (sampled product vs the dense masked oracle):
+
+    >>> import numpy as np, jax.numpy as jnp
+    >>> from repro.core import bcsr as bcsr_lib
+    >>> from repro.kernels import ops
+    >>> rng = np.random.default_rng(0)
+    >>> dense = np.kron(rng.random((4, 4)) < 0.5,
+    ...                 np.ones((8, 8))).astype(np.float32)
+    >>> a = bcsr_lib.from_dense(dense, (8, 8))
+    >>> arrays, meta = ops.prepare_sparse(a, dtype=jnp.float32)
+    >>> x = jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32))
+    >>> y = jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32))
+    >>> vals = ops.sddmm(arrays, meta, x, y, backend="xla")
+    >>> vals.shape == (meta.nnzb, 8, 8)
+    True
+    >>> full = np.asarray(x) @ np.asarray(y).T   # dense X Y^T, then sample
+    >>> blk = full.reshape(4, 8, 4, 8).transpose(0, 2, 1, 3)[
+    ...     np.asarray(arrays.row_ids), np.asarray(arrays.col_ids)]
+    >>> blk *= np.asarray(arrays.real_mask)[:, None, None]  # padding -> 0
+    >>> bool(jnp.allclose(vals, blk, atol=1e-4))
+    True
+    """
+    backend, bn = resolve_backend(backend, bn, meta, int(x.shape[-1]),
+                                  op="sddmm")
+    cfg = SpmmConfig(backend=backend, bn=bn, interpret=interpret,
+                     out_dtype=str(jnp.dtype(out_dtype))
+                     if out_dtype else None)
+    rest = tuple(arrays[1:])
+    return _sddmm(cfg, meta, x, y, rest)
 
 
 def make_row_loop_schedule(a: bcsr_lib.BCSR):

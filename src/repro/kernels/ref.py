@@ -61,6 +61,22 @@ def bcsr_sddmm_ref(dc: jnp.ndarray, b: jnp.ndarray, row_ids: jnp.ndarray,
     return dvals.astype(out_dtype or dc.dtype)
 
 
+def bcsr_sddmm_dense_ref(dc: jnp.ndarray, b: jnp.ndarray,
+                         row_ids: jnp.ndarray, col_ids: jnp.ndarray,
+                         h: int, w: int, out_dtype=None) -> jnp.ndarray:
+    """The dense-masked arm of SDDMM: materialize the FULL ``dC @ B^T``
+    product on the MXU, then gather the stored blocks.  Wins when the
+    structure is near-dense (block coverage so high that skipping blocks
+    saves less than the gather costs); the autotuner's ``sddmm_dense``
+    variant lowers to this."""
+    M, N = dc.shape
+    K, _ = b.shape
+    full = jnp.dot(dc.astype(jnp.float32), b.astype(jnp.float32).T,
+                   preferred_element_type=jnp.float32)        # [M, K]
+    blocks = full.reshape(M // h, h, K // w, w).transpose(0, 2, 1, 3)
+    return blocks[row_ids, col_ids].astype(out_dtype or dc.dtype)
+
+
 def spmm_dense_ref(a_dense: jnp.ndarray, b: jnp.ndarray,
                    out_dtype=None) -> jnp.ndarray:
     """The cuBLAS stand-in: multiply the (explicitly padded) dense matrix."""

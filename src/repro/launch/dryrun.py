@@ -250,6 +250,24 @@ def sparse_shard_report(cfg, n_tokens: int = 512) -> dict:
     return rep
 
 
+def sparse_attention_report(cfg, seq_len: int = 512) -> dict:
+    """Mask structure + autotune picks of the arch's block-sparse attention
+    (``ModelConfig.attn_sparsity``) — empty when the arch has none.
+
+    Reports the mask nnzb / block density vs dense-causal and the v5
+    ``op=sddmm`` (score) + ``op=spmm`` (context) picks the spec's backend
+    resolves for a ``seq_len`` sequence at the arch's REAL head dim (the
+    contraction width the runtime ops fingerprint with) — the attention
+    twin of ``sparse_shard_report``, derived entirely from static metas
+    (the PR-4/PR-5 pipeline: no params, no arrays)."""
+    spec = getattr(cfg, "attn_sparsity", None)
+    if spec is None:
+        return {}
+    from repro.models import attention as A
+    seq = max(seq_len, spec.block[0] * 2)   # at least two block-rows
+    return A.attention_mask_report(spec, seq, head_dim=cfg.head_dim)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -292,6 +310,16 @@ def main(argv=None):
                       f"auto picks {r['auto_picks']}")
             records.append({"arch": cfg.name, "status": "sparse_shards",
                             "sparse_shards": shard_rep})
+        attn_rep = sparse_attention_report(cfg)
+        if attn_rep:
+            print(f"[dryrun] {cfg.name} sparse attention mask: "
+                  f"{attn_rep['mask']['kind']} nnzb={attn_rep['nnzb']} "
+                  f"({attn_rep['block_density_vs_causal']}x of dense-causal "
+                  f"blocks at seq {attn_rep['seq_len']}), picks "
+                  f"sddmm={attn_rep['sddmm_pick']} "
+                  f"spmm={attn_rep['spmm_pick']}")
+            records.append({"arch": cfg.name, "status": "sparse_attention",
+                            "sparse_attention": attn_rep})
         for s in shapes:
             cell = SHAPES[s]
             if args.batch or args.seq:

@@ -1,0 +1,307 @@
+"""Block-sparse attention — the SDDMM/SpMM pair as a sequence-mixing layer.
+
+The paper's ops power two workloads: sparse *weights* (the FFN path that
+has been in the repo since PR 1) and sparse *interactions* — attention
+whose score matrix is only evaluated on a static block mask.  This module
+builds the second one from the public kernel ops:
+
+    scores = ops.sddmm(mask, Q, K)        # Q K^T sampled at stored blocks
+    probs  = masked block softmax         # per query row, stored keys only
+    ctx    = ops.spmm(mask<-probs, V)     # probs @ V over the same structure
+
+Gradients need no extra code: SpMM and SDDMM are mutual duals (each op's
+custom VJP calls the other), so d(ctx)/d{Q,K,V} bounces between the two
+Pallas kernels exactly like the dense math would between its two GEMMs.
+
+Masks are STATIC (a pure function of ``(mask_spec, seq_len, block)``), so
+the whole PR-4 static-metadata pipeline applies: ``attention_mask_meta``
+memoizes the true structure meta — nnzb, ``max_bpr``, skew — without
+building arrays, ``backend="auto"`` resolves the SDDMM and SpMM variants
+per layer from the v5 fingerprints, and scanned layer stacks merge their
+per-layer metas with ``core.sparse_linear.merge_sparse_metas``.  The index
+arrays themselves are trace-time constants, never params — a mask has no
+gradient.
+
+Wired end-to-end: ``ModelConfig.attn_sparsity`` switches
+``models.layers.attention``'s train/prefill path onto this module (decode
+applies the same mask spec as a positional bias, so serving stays
+consistent with training); ``launch.dryrun`` prints the mask nnzb and the
+auto picks; ``AttnSparsitySpec(shards=S)`` row-shards the score structure
+through ``launch.dist_spmm`` (shard_map under a compatible mesh, identical
+in-process math otherwise).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bcsr as bcsr_lib
+# the spec/builder leaf lives in core (configs imports it too — the layer
+# map stays one-directional); this module is the user-facing namespace,
+# so re-export the whole surface:
+from repro.core.attention_mask import (NEG_INF, AttnMaskSpec,  # noqa: F401
+                                       AttnSparsitySpec, banded,
+                                       blockwise_causal, local_global,
+                                       mask_allowed)
+from repro.core.sparse_linear import merge_sparse_metas
+from repro.kernels import ops
+
+
+def decode_mask_bias(spec: AttnMaskSpec, q_pos: jnp.ndarray,
+                     k_pos: jnp.ndarray) -> jnp.ndarray:
+    """Additive decode-step bias ``[..., Lq, Sk]`` applying the SAME mask
+    the block-sparse train/prefill path realizes — what keeps a served
+    model consistent with how it was trained."""
+    return jnp.where(mask_allowed(spec, q_pos, k_pos), 0.0, NEG_INF)
+
+
+# ======================================================== mask BCSR pipeline
+@functools.lru_cache(maxsize=None)
+def attention_mask_bcsr(spec: AttnMaskSpec, seq_len: int,
+                        block: Tuple[int, int]) -> bcsr_lib.BCSR:
+    """Host BCSR of the element mask (vals are 0/1 f32; blocks with any
+    allowed element are stored).  Memoized: the mask is a pure function of
+    ``(spec, seq_len, block)`` — the attention analogue of the weight
+    pipeline's deterministic ``(seed, dims, spec)`` patterns.
+
+    Built one block-row strip at a time (peak O(h * L) host memory) — a
+    dense [L, L] mask would be multi-GiB at the 32k prefill cell — with
+    output identical to ``from_dense(mask_allowed(...))`` on the full
+    dense mask (entries row-major by (block-row, block-col))."""
+    h, w = block
+    nbr = -(-seq_len // h)
+    nbc = -(-seq_len // w)
+    k_pos = np.arange(nbc * w)
+    k_valid = k_pos < seq_len
+    rows, cols, vals = [], [], []
+    for i in range(nbr):
+        q_pos = np.arange(i * h, (i + 1) * h)
+        strip = mask_allowed(spec, q_pos, k_pos)
+        strip &= k_valid[None, :] & (q_pos < seq_len)[:, None]
+        blocks = strip.reshape(h, nbc, w).transpose(1, 0, 2)  # [nbc, h, w]
+        nz = np.flatnonzero(blocks.any(axis=(1, 2)))
+        rows.append(np.full(nz.size, i, np.int32))
+        cols.append(nz.astype(np.int32))
+        vals.append(blocks[nz].astype(np.float32))
+    row_ids = np.concatenate(rows)
+    col_ids = np.concatenate(cols)
+    vals = np.concatenate(vals) if row_ids.size else \
+        np.zeros((0, h, w), np.float32)
+    return bcsr_lib.BCSR(vals, col_ids, row_ids,
+                         bcsr_lib.rowptr_from_rows(row_ids, nbr),
+                         (seq_len, seq_len), (h, w))
+
+
+@functools.lru_cache(maxsize=None)
+def attention_mask_meta(spec: AttnMaskSpec, seq_len: int,
+                        block: Tuple[int, int]) -> ops.SparseMeta:
+    """TRUE structure meta of the mask — ``prepare_sparse_meta`` on the
+    deterministic mask BCSR, memoized.  This is what ``backend="auto"``
+    fingerprints (v5, both the ``op=sddmm`` score pick and the ``op=spmm``
+    context pick) and what ``launch.dryrun`` reports, with no arrays
+    built."""
+    return ops.prepare_sparse_meta(attention_mask_bcsr(spec, seq_len, block))
+
+
+@functools.lru_cache(maxsize=None)
+def attention_mask_arrays(spec: AttnMaskSpec, seq_len: int,
+                          block: Tuple[int, int]
+                          ) -> Tuple[ops.SparseArrays, ops.SparseMeta]:
+    """Arrays + meta of the mask structure.  The arrays are HOST (numpy)
+    constants — index structure and 0/1 element weights.  They are not
+    params, carry no gradient, and embed as trace-time constants in
+    whatever jit/scan body touches them; keeping them numpy (instead of
+    device arrays) makes the memoized value safe to build lazily inside a
+    trace and to share across traces."""
+    host, meta = ops._prepare_sparse_host(
+        attention_mask_bcsr(spec, seq_len, block), reorder="identity",
+        reorder_granularity="element", tau=0.7, max_candidates=None,
+        n_shards=1)
+    assert meta == attention_mask_meta(spec, seq_len, block)
+    arrays = ops.SparseArrays(
+        vals=host["vals"].astype(np.float32),
+        row_ids=host["row_ids"].astype(np.int32),
+        col_ids=host["col_ids"].astype(np.int32),
+        real_mask=host["real_mask"],
+        t_perm=host["t_perm"].astype(np.int32),
+        t_row_ids=host["t_row_ids"].astype(np.int32),
+        t_col_ids=host["t_col_ids"].astype(np.int32),
+        row_perm=host["row_perm"].astype(np.int32),
+        inv_perm=host["inv_perm"].astype(np.int32))
+    return arrays, meta
+
+
+def merged_attention_meta(specs, seq_len: int,
+                          block: Tuple[int, int]) -> ops.SparseMeta:
+    """One static meta covering every layer of a scanned stack — the
+    attention twin of ``models.layers.mlp_sparse_metas``: per-spec metas
+    merge conservatively (``merge_sparse_metas``: stats take the stack
+    max), so a single traced body dispatches correctly for all layers."""
+    return merge_sparse_metas(
+        [attention_mask_meta(s, seq_len, block) for s in specs])
+
+
+@functools.lru_cache(maxsize=None)
+def _mask_sharded(spec: AttnMaskSpec, seq_len: int, block: Tuple[int, int],
+                  n_shards: int):
+    """Row-partitioned view of the mask structure (``launch.dist_spmm``):
+    the context SpMM's score operand split over block-rows with the LPT
+    balancer.  The flat probs computed by the SDDMM drop into the
+    partition's ``vals`` slot untouched — both sides are built from the
+    same padded host BCSR, so the global entry order is shared."""
+    from repro.launch import dist_spmm  # local: layering
+    a = attention_mask_bcsr(spec, seq_len, block)
+    host, smeta = dist_spmm._prepare_sharded_host(a, n_shards)
+    _, meta = attention_mask_arrays(spec, seq_len, block)
+    if smeta.nnzb != meta.nnzb:   # same padded entry list by construction
+        raise AssertionError(
+            f"sharded/unsharded mask entry counts diverged: "
+            f"{smeta.nnzb} vs {meta.nnzb}")
+    # host (numpy) constants, like attention_mask_arrays — trace-safe
+    sharr = dist_spmm.ShardedArrays(
+        vals=host["vals"].astype(np.float32),
+        src_index=host["src_index"].astype(np.int32),
+        row_ids=host["row_ids"].astype(np.int32),
+        col_ids=host["col_ids"].astype(np.int32),
+        real_mask=host["real_mask"],
+        t_perm=host["t_perm"].astype(np.int32),
+        t_row_ids=host["t_row_ids"].astype(np.int32),
+        t_col_ids=host["t_col_ids"].astype(np.int32),
+        gather_rows=host["gather_rows"].astype(np.int32))
+    return sharr, smeta
+
+
+# ============================================================= sparse layer
+def block_softmax(scores: jnp.ndarray, elem_mask: jnp.ndarray,
+                  row_ids: jnp.ndarray, n_block_rows: int,
+                  cap: Optional[float] = None) -> jnp.ndarray:
+    """Masked softmax over a BCSR score matrix, per GLOBAL query row.
+
+    scores     [nnzb, h, w] f32 logits (already scaled)
+    elem_mask  [nnzb, h, w] bool — valid (stored AND allowed) elements
+    row_ids    [nnzb] block-row of each block
+    returns    [nnzb, h, w] probabilities; masked elements are exactly 0,
+               each valid query row sums to 1 across its stored blocks.
+    """
+    if cap is not None:
+        scores = cap * jnp.tanh(scores / cap)
+    logits = jnp.where(elem_mask, scores, NEG_INF)
+    blk_max = jnp.max(logits, axis=2)                       # [nnzb, h]
+    row_max = jax.ops.segment_max(blk_max, row_ids,
+                                  num_segments=n_block_rows)  # [nbr, h]
+    row_max = jnp.maximum(row_max, -1e30)   # rows with no valid element
+    z = jnp.exp(logits - row_max[row_ids][:, :, None])
+    z = jnp.where(elem_mask, z, 0.0)
+    denom = jax.ops.segment_sum(z.sum(axis=2), row_ids,
+                                num_segments=n_block_rows)    # [nbr, h]
+    denom = jnp.maximum(denom, 1e-30)
+    return z / denom[row_ids][:, :, None]
+
+
+def _context_spmm(probs: jnp.ndarray, arrays: ops.SparseArrays,
+                  meta: ops.SparseMeta, v: jnp.ndarray,
+                  spec: AttnSparsitySpec) -> jnp.ndarray:
+    """ctx = probs @ V over the mask structure — unsharded, or through the
+    ``dist_spmm`` row partition when ``spec.shards > 0``."""
+    if spec.shards > 0:
+        from repro.launch import dist_spmm  # local: layering
+        sharr, smeta = _mask_sharded(spec.mask, meta.shape[0], meta.block,
+                                     spec.shards)
+        mesh = dist_spmm.current_spmm_mesh()
+        if mesh is not None:
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            if sizes.get(dist_spmm.AXIS_ROW) != spec.shards:
+                mesh = None     # incompatible ambient mesh: local fallback
+        return dist_spmm.spmm_sharded(
+            sharr._replace(vals=probs), smeta, v, backend=spec.backend,
+            bn=spec.bn, interpret=spec.interpret, mesh=mesh)
+    return ops.spmm(arrays._replace(vals=probs), meta, v,
+                    backend=spec.backend, bn=spec.bn,
+                    interpret=spec.interpret)
+
+
+def block_sparse_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           spec: AttnSparsitySpec, *,
+                           scale: Optional[float] = None,
+                           cap: Optional[float] = None) -> jnp.ndarray:
+    """Attention with scores evaluated only on the stored mask blocks.
+
+    q, k, v  [B, L, H, d]  (GQA callers repeat KV heads first)
+    returns  [B, L, H, d] in f32 (callers cast), matching the dense-masked
+             reference on the mask support.
+
+    The per-(batch, head) instance is SDDMM -> block softmax -> SpMM; the
+    fold over (B, H) is a ``vmap`` over the two custom-VJP ops with the
+    mask structure closed over as constants.
+
+    >>> import numpy as np, jax.numpy as jnp
+    >>> from repro.models import attention as A
+    >>> rng = np.random.default_rng(0)
+    >>> q = jnp.asarray(rng.standard_normal((2, 64, 2, 8)), jnp.float32)
+    >>> k = jnp.asarray(rng.standard_normal((2, 64, 2, 8)), jnp.float32)
+    >>> v = jnp.asarray(rng.standard_normal((2, 64, 2, 8)), jnp.float32)
+    >>> spec = A.AttnSparsitySpec(mask=A.banded(32), block=(8, 8),
+    ...                           backend="xla")
+    >>> out = A.block_sparse_attention(q, k, v, spec)
+    >>> out.shape
+    (2, 64, 2, 8)
+    >>> bool(jnp.all(jnp.isfinite(out)))
+    True
+    """
+    B, L, H, d = q.shape
+    scale = d ** -0.5 if scale is None else scale
+    arrays, meta = attention_mask_arrays(spec.mask, L, spec.block)
+    # host constants: valid = stored-and-allowed AND not a padding entry
+    elem_mask = (arrays.vals > 0.5) & arrays.real_mask[:, None, None]
+
+    def one_head(qi, ki, vi):
+        scores = ops.sddmm(arrays, meta, qi, ki, backend=spec.backend,
+                           bn=spec.bn, interpret=spec.interpret,
+                           out_dtype=jnp.float32)
+        probs = block_softmax(scores * scale, elem_mask, arrays.row_ids,
+                              meta.n_block_rows, cap=cap)
+        return _context_spmm(probs, arrays, meta, vi, spec)
+
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, L, d).astype(jnp.float32)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, L, d).astype(jnp.float32)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, L, d).astype(jnp.float32)
+    ctx = jax.vmap(one_head)(qf, kf, vf)                   # [B*H, L, d]
+    return ctx.reshape(B, H, L, d).transpose(0, 2, 1, 3)
+
+
+# ================================================================ reporting
+def attention_mask_report(spec: AttnSparsitySpec, seq_len: int,
+                          head_dim: int = 0) -> dict:
+    """Mask structure + kernel picks for the dry-run: nnzb, block density
+    vs dense causal, and the v5 ``op=sddmm`` / ``op=spmm`` picks the
+    spec's backend resolves at this sequence length.
+
+    ``head_dim`` is the contraction width the runtime ops actually
+    fingerprint with (both the SDDMM's N axis and the context SpMM's
+    panel are head-dim wide per vmapped instance) — pass the model's real
+    head dim or the printed picks can come from the wrong N bucket."""
+    meta = attention_mask_meta(spec.mask, seq_len, spec.block)
+    nbr = meta.n_block_rows
+    causal_blocks = nbr * (nbr + 1) // 2
+    head_n = head_dim or meta.block[1]
+    sddmm_be = ops.resolve_backend(spec.backend, spec.bn, meta, head_n,
+                                   op="sddmm")
+    spmm_be = ops.resolve_backend(spec.backend, spec.bn, meta, head_n,
+                                  op="spmm")
+    return {
+        "mask": dataclasses.asdict(spec.mask),
+        "block": list(meta.block),
+        "seq_len": seq_len,
+        "nnzb": meta.nnzb,
+        "max_bpr": meta.max_bpr,
+        "block_density_vs_causal": round(meta.nnzb / max(causal_blocks, 1),
+                                         4),
+        "sddmm_pick": "{}/bn{}".format(*sddmm_be),
+        "spmm_pick": "{}/bn{}".format(*spmm_be),
+        "shards": spec.shards,
+    }

@@ -1,5 +1,6 @@
 """Transformer layer components: norms, RoPE, GQA attention (sliding window,
-logit softcap, QKV bias), MLA (DeepSeek), gated MLP (dense or block-sparse —
+logit softcap, QKV bias, or block-sparse scores on a static BCSR mask —
+``cfg.attn_sparsity``), MLA (DeepSeek), gated MLP (dense or block-sparse —
 the paper's technique as a drop-in FFN).
 
 Conventions:
@@ -10,6 +11,7 @@ Conventions:
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
@@ -113,12 +115,41 @@ def _sdpa(q, k, v, bias, cap, scale):
     return ctx.reshape(B, Lq, H, dv)
 
 
+def _sparse_mask(cfg, window):
+    """Effective mask spec of the block-sparse attention path: the config's
+    static pattern, intersected with the layer's sliding window when one is
+    set (gemma-style local halves keep their window under sparse scores)."""
+    mask = cfg.attn_sparsity.mask
+    if window is not None:
+        mask = dataclasses.replace(mask, window_cap=int(window))
+    return mask
+
+
+def _sparse_attention(cfg, q, k, v, window, cap, scale):
+    """Full-sequence attention through ``models.attention``: SDDMM scores
+    on the static BCSR mask, masked block softmax, SpMM context.  Replaces
+    ``_causal_attention`` when ``cfg.attn_sparsity`` is set."""
+    from repro.models import attention as A
+    spec = dataclasses.replace(cfg.attn_sparsity,
+                               mask=_sparse_mask(cfg, window))
+    rep = q.shape[2] // k.shape[2]
+    if rep > 1:                     # GQA: expand KV heads for per-head ops
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    return A.block_sparse_attention(q, k, v, spec, scale=scale, cap=cap)
+
+
 def attention(cfg, p, x, *, window=None, cache=None, pos=None,
               rope_theta=None):
     """Returns (y, new_cache).  Modes:
       train:    cache None, pos None — full causal self-attention.
       prefill:  cache dict (zeroed, len >= L), pos = 0 — causal + cache write.
       decode:   cache dict, L == 1, pos = current position (int32 scalar).
+
+    With ``cfg.attn_sparsity`` set, train/prefill score the static BCSR
+    mask through the SDDMM/SpMM pair (``models.attention``) and decode
+    applies the SAME mask spec as a positional bias — served tokens stay
+    consistent with how the model trains.
     """
     B, L, D = x.shape
     h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -137,8 +168,12 @@ def attention(cfg, p, x, *, window=None, cache=None, pos=None,
     scale = dh ** -0.5
     cap = cfg.attn_logit_softcap
 
+    sparse = getattr(cfg, "attn_sparsity", None)
     if cache is None:
-        ctx = _causal_attention(q, k, v, window, cap, scale)
+        if sparse is not None:
+            ctx = _sparse_attention(cfg, q, k, v, window, cap, scale)
+        else:
+            ctx = _causal_attention(q, k, v, window, cap, scale)
         new_cache = None
     elif L > 1:                              # prefill into empty cache
         Sc = cache["k"].shape[1]
@@ -147,7 +182,10 @@ def attention(cfg, p, x, *, window=None, cache=None, pos=None,
         vc = jax.lax.dynamic_update_slice(
             cache["v"], v[:, -Sc:].astype(cache["v"].dtype), (0, 0, 0, 0))
         new_cache = {"k": kc, "v": vc}
-        ctx = _causal_attention(q, k, v, window, cap, scale)
+        if sparse is not None:
+            ctx = _sparse_attention(cfg, q, k, v, window, cap, scale)
+        else:
+            ctx = _causal_attention(q, k, v, window, cap, scale)
     else:                                    # decode one token
         Sc = cache["k"].shape[1]
         slot = pos % Sc
@@ -159,6 +197,11 @@ def attention(cfg, p, x, *, window=None, cache=None, pos=None,
         j = jnp.arange(Sc, dtype=jnp.int32)
         k_pos = pos - ((pos - j) % Sc)       # ring-buffer slot positions
         bias = _mask_bias(jnp.reshape(pos, (1,)), k_pos, window)  # [1, Sc]
+        if sparse is not None:
+            # the decode twin of the block-sparse score mask
+            from repro.models import attention as A
+            bias = bias + A.decode_mask_bias(
+                _sparse_mask(cfg, window), jnp.reshape(pos, (1,)), k_pos)
         bias = jnp.broadcast_to(bias[None], (B, 1, Sc))
         ctx = _sdpa(q, kc, vc, bias, cap, scale)
 

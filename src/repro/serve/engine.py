@@ -72,7 +72,13 @@ class ServeEngine:
         path re-derives per trace (``models.layers.mlp_sparse_metas`` —
         real per-shard stats), so decode gets the same heterogeneous
         per-shard kernel picks as the raw ``dist_spmm`` API; warm the
-        autotune cache across processes with ``REPRO_AUTOTUNE_CACHE``."""
+        autotune cache across processes with ``REPRO_AUTOTUNE_CACHE``.
+
+        With ``cfg.attn_sparsity`` set (block-sparse attention), decode
+        steps apply the SAME static mask spec as a positional bias, so
+        served tokens match the block-sparse train/prefill math —
+        ``tests/test_sddmm_attention.py`` pins engine-level equality
+        against a dense-attention engine for the causal mask."""
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots

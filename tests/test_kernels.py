@@ -179,3 +179,133 @@ def test_ops_unaligned_shapes():
                    interpret=True)
     np.testing.assert_allclose(np.asarray(got)[:50], dense @ np.asarray(b),
                                rtol=1e-4, atol=1e-4)
+
+
+# ===================================================================== SDDMM
+def _sddmm_oracle(a, dc, b):
+    """Dense masked-einsum oracle: blocks of dC @ B^T at the stored
+    coordinates (f32 accumulation)."""
+    h, w = a.block
+    full = np.asarray(dc, np.float32) @ np.asarray(b, np.float32).T
+    nbr, nbc = full.shape[0] // h, full.shape[1] // w
+    blocks = full.reshape(nbr, h, nbc, w).transpose(0, 2, 1, 3)
+    return blocks[np.asarray(a.row_ids), np.asarray(a.col_ids)]
+
+
+@pytest.mark.parametrize("shape,block,density", SHAPES)
+@pytest.mark.parametrize("n", [8, 64])
+def test_sddmm_matches_dense_masked_einsum(shape, block, density, n):
+    a = _mk(shape, block, density)
+    rng = np.random.default_rng(11)
+    h, w = block
+    M = a.n_block_rows * h
+    K = a.n_block_cols * w
+    dc = rng.standard_normal((M, n)).astype(np.float32)
+    b = rng.standard_normal((K, n)).astype(np.float32)
+    want = _sddmm_oracle(a, dc, b)
+    got = pk.bcsr_sddmm(jnp.asarray(dc), jnp.asarray(b),
+                        jnp.asarray(a.row_ids), jnp.asarray(a.col_ids),
+                        h, w, bn=min(64, n), interpret=True)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+    got_ref = ref.bcsr_sddmm_ref(jnp.asarray(dc), jnp.asarray(b),
+                                 jnp.asarray(a.row_ids),
+                                 jnp.asarray(a.col_ids), h, w)
+    np.testing.assert_allclose(np.asarray(got_ref), want,
+                               rtol=1e-5, atol=1e-5)
+    got_dense = ref.bcsr_sddmm_dense_ref(jnp.asarray(dc), jnp.asarray(b),
+                                         jnp.asarray(a.row_ids),
+                                         jnp.asarray(a.col_ids), h, w)
+    np.testing.assert_allclose(np.asarray(got_dense), want,
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape,block,density", SHAPES[:3])
+def test_sddmm_row_loop_matches_ref(shape, block, density):
+    a = _mk(shape, block, density)
+    rng = np.random.default_rng(12)
+    h, w = block
+    dc = rng.standard_normal((a.n_block_rows * h, 32)).astype(np.float32)
+    b = rng.standard_normal((a.n_block_cols * w, 32)).astype(np.float32)
+    flat_idx, flat_col, _, max_bpr = ops.make_row_loop_schedule(a)
+    # sddmm schedule: padding slots must point at the SENTINEL entry, not 0
+    sched_idx, sched_col = ops._sddmm_row_loop_schedule(
+        jnp.asarray(a.row_ids), jnp.asarray(a.col_ids), a.n_block_rows,
+        max_bpr)
+    got = pk.bcsr_sddmm_row_loop(
+        jnp.asarray(dc), jnp.asarray(b), sched_idx, sched_col,
+        a.n_block_rows, a.nnzb, h, w, bn=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), _sddmm_oracle(a, dc, b),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sddmm_row_loop_skewed_and_empty_rows():
+    # dc2-style skew + empty block-rows: sentinel slots must not clobber
+    # entry 0 (the regression the sentinel output block exists for)
+    rng = np.random.default_rng(13)
+    dense = np.zeros((64, 128), np.float32)
+    dense[3, :] = rng.standard_normal(128)       # one very dense row
+    dense[17, 5] = 1.0                           # singleton
+    a = bcsr_lib.from_dense(dense, (8, 16)).ensure_nonempty_rows()
+    dc = rng.standard_normal((64, 16)).astype(np.float32)
+    b = rng.standard_normal((128, 16)).astype(np.float32)
+    _, _, _, max_bpr = ops.make_row_loop_schedule(a)
+    sched_idx, sched_col = ops._sddmm_row_loop_schedule(
+        jnp.asarray(a.row_ids), jnp.asarray(a.col_ids), a.n_block_rows,
+        max_bpr)
+    got = pk.bcsr_sddmm_row_loop(
+        jnp.asarray(dc), jnp.asarray(b), sched_idx, sched_col,
+        a.n_block_rows, a.nnzb, 8, 16, bn=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), _sddmm_oracle(a, dc, b),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_sddmm_dtypes_f32_accumulation(dtype):
+    # mixed-precision contract: inputs may be bf16, accumulation is f32
+    # VMEM scratch, output takes the requested dtype
+    shape, block = (128, 128), (16, 16)
+    a = _mk(shape, block, 0.3)
+    rng = np.random.default_rng(14)
+    dc = jnp.asarray(rng.standard_normal((128, 64)).astype(np.float32)
+                     ).astype(dtype)
+    b = jnp.asarray(rng.standard_normal((128, 64)).astype(np.float32)
+                    ).astype(dtype)
+    got = pk.bcsr_sddmm(dc, b, jnp.asarray(a.row_ids),
+                        jnp.asarray(a.col_ids), 16, 16, bn=64,
+                        out_dtype=jnp.float32, interpret=True)
+    assert got.dtype == jnp.float32
+    want = _sddmm_oracle(a, np.asarray(dc, np.float32),
+                         np.asarray(b, np.float32))
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got), want, rtol=tol, atol=tol)
+
+
+def test_ops_sddmm_ragged_and_empty_rows():
+    # M, K not multiples of the block; genuinely empty block-rows whose
+    # padding entries must come back exactly zero (real_mask)
+    rng = np.random.default_rng(15)
+    dense = np.zeros((50, 70), np.float32)
+    dense[0:8, 0:16] = rng.standard_normal((8, 16))
+    dense[33:41, 48:64] = rng.standard_normal((8, 16))
+    a = bcsr_lib.from_dense(dense, (8, 16))
+    arrays, meta = ops.prepare_sparse(a, dtype=jnp.float32)
+    x = jnp.asarray(rng.standard_normal((50, 24)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((70, 24)).astype(np.float32))
+    x_pad = np.zeros((meta.n_block_rows * 8, 24), np.float32)
+    x_pad[:50] = np.asarray(x)
+    y_pad = np.zeros((meta.n_block_cols * 16, 24), np.float32)
+    y_pad[:70] = np.asarray(y)
+    h, w = meta.block
+    full = x_pad @ y_pad.T
+    blocks = full.reshape(meta.n_block_rows, h, meta.n_block_cols, w
+                          ).transpose(0, 2, 1, 3)
+    want = blocks[np.asarray(arrays.row_ids), np.asarray(arrays.col_ids)]
+    want *= np.asarray(arrays.real_mask)[:, None, None]
+    for backend in ("pallas", "row_loop", "xla", "dense"):
+        got = ops.sddmm(arrays, meta, x, y, backend=backend, bn=64,
+                        interpret=True)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4,
+                                   atol=1e-4, err_msg=backend)
+        pad_rows = ~np.asarray(arrays.real_mask)
+        assert pad_rows.any()            # the case genuinely has padding
+        assert np.all(np.asarray(got)[pad_rows] == 0.0)

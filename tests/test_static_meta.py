@@ -1,6 +1,6 @@
 """Static structure-metadata pipeline tests (specs-vs-init contract,
 model-path heterogeneous per-shard dispatch, reorder-aware row_loop
-schedules, v4 fingerprints).
+schedules, v5 fingerprints).
 
 The contract under test: a sparse layer's TRUE structure meta is a pure
 static function of ``(seed, dims, spec)`` — ``sparse_linear_meta`` (and
@@ -130,7 +130,7 @@ def test_model_path_shard_metas_match_direct_dist_spmm():
 
 def test_model_path_shard_fingerprints_differ():
     """Regression vs the dims-only collapse: shards with different local
-    structures must reach the autotuner as DIFFERENT v4 fingerprints
+    structures must reach the autotuner as DIFFERENT v5 fingerprints
     through the model path (they used to share one zero-stats key)."""
     spec = _spec(shards=4, backend="auto")
     meta_in, meta_out = L.mlp_sparse_metas(spec, D, F, (0,))
@@ -229,14 +229,14 @@ def test_reorder_strictly_shrinks_row_loop_schedule():
                                rtol=1e-4, atol=1e-3)
 
 
-def test_fingerprint_v4_carries_schedule_bound():
+def test_fingerprint_carries_schedule_bound():
     """Two metas identical except for the row_loop schedule bound must not
-    alias in the cache (the v4 field), so a shrunk reordered structure
-    never inherits the unshrunk twin's row_loop decision."""
+    alias in the cache (the mb= field, added in v4), so a shrunk reordered
+    structure never inherits the unshrunk twin's row_loop decision."""
     a = bcsr_lib.random_bcsr_exact(0, (256, 256), (16, 16), nnzb=64)
     meta = ops.prepare_sparse_meta(a)
     twin = dataclasses.replace(meta, max_bpr=meta.max_bpr + 1)
     k0, k1 = autotune.fingerprint(meta, 64).key(), \
         autotune.fingerprint(twin, 64).key()
     assert k0 != k1
-    assert k0.startswith("v4|") and f"mb={meta.max_bpr}" in k0
+    assert k0.startswith("v5|") and f"mb={meta.max_bpr}" in k0

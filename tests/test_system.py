@@ -70,3 +70,27 @@ def test_sparse_lm_train_then_serve(tmp_path):
                        max_new_tokens=3))
     done = eng.run()
     assert len(done[0].out_tokens) == 3
+
+
+def test_benchmark_modules_importable():
+    """Every module benchmarks/run.py can dispatch to — the gated SUITE
+    and the report-only FIGURES — must stay importable, with the expected
+    entry points.  CI runs only the gated suite; this keeps the figure
+    modules from silently bit-rotting (they used to be orphans)."""
+    import importlib
+    import os
+    import sys
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    run = importlib.import_module("benchmarks.run")
+    for mod_name, baseline in run.SUITE:
+        mod = importlib.import_module(f"benchmarks.{mod_name}")
+        assert callable(mod.run) and callable(mod.diff), mod_name
+        assert os.path.exists(os.path.join(root, "benchmarks", baseline)), \
+            f"{mod_name}: committed baseline {baseline} missing"
+    for mod_name in run.FIGURES:
+        mod = importlib.import_module(f"benchmarks.{mod_name}")
+        assert callable(mod.run), mod_name
+    assert callable(
+        importlib.import_module("benchmarks.compare_sweeps").main)
