@@ -1,0 +1,206 @@
+"""Block-sparse attention benchmark: the fused one-kernel path vs the
+composed SDDMM -> softmax -> SpMM triple vs the dense-masked oracle.
+
+For each attention-mask family, times the three implementations and
+reports the v6 ``op=attn`` fingerprint, the autotune pick, and the
+DETERMINISTIC peak-workspace estimate: the composed path materializes the
+scores AND probs tensors (``2 * nnzb * h * w * 4`` bytes per head
+instance), while the fused kernel keeps only per-block-row running state
+(max + denominator lanes and the context accumulator) — O(L * d).  Emits
+``BENCH_attention.json`` for the CI regression-diff step:
+
+  python benchmarks/bench_attention.py --smoke --out BENCH_attention.json \
+      --diff benchmarks/BENCH_attention.baseline.json
+
+Gate policy (README ## Benchmarks): the DETERMINISTIC fields gate hard —
+case set, mask nnzb / max_bpr, the v6 ``op=attn`` fingerprint key, pick
+membership in the attn variant family, the workspace-bytes estimates, and
+the two correctness bits (``bitwise_equal``: fused == composed bit-for-bit
+in f32; ``matches_oracle``: both within 1e-4 of the dense-masked
+reference).  Wall-clock numbers are REPORT-ONLY: interpret-mode timings on
+shared runners are not falsifiable.  Refresh with
+``--out benchmarks/BENCH_attention.baseline.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (os.path.join(_ROOT, "src"), _ROOT):
+    if _p not in sys.path:  # runnable without a manual PYTHONPATH prefix
+        sys.path.insert(0, _p)
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import autotune
+from repro.models import attention as A
+
+_BLOCK = (16, 16)
+_HEAD_DIM = 64
+
+
+def _cases(smoke: bool):
+    """(name, mask spec, seq_len) — the three mask families at benchmark
+    scale (the same patterns the SDDMM benchmark streams)."""
+    seq = 256 if smoke else 1024
+    yield "attn_banded", A.banded(seq // 4), seq
+    yield "attn_local_global", A.local_global(seq // 8, seq // 16), seq
+    yield "attn_causal", A.blockwise_causal(), seq
+
+
+def _dense_masked(q, k, v, mask, scale):
+    L = q.shape[1]
+    allowed = jnp.asarray(A.mask_allowed(mask, np.arange(L), np.arange(L)))
+
+    def one(qi, ki, vi):                       # [L, d] per (batch, head)
+        s = (qi @ ki.T) * scale
+        p = jax.nn.softmax(jnp.where(allowed, s, A.NEG_INF), axis=-1)
+        return p @ vi
+    return jax.vmap(jax.vmap(one, in_axes=1, out_axes=1))(q, k, v)
+
+
+def _time_fn(fn, *operands, iters=3):
+    jax.block_until_ready(fn(*operands))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*operands))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def run(smoke: bool = True) -> dict:
+    autotune.set_autotuner(autotune.Autotuner())
+    rows = []
+    h, w = _BLOCK
+    for name, mask, seq in _cases(smoke):
+        meta = A.attention_mask_meta(mask, seq, _BLOCK)
+        fp = autotune.fingerprint(meta, _HEAD_DIM, op="attn")
+        pick = autotune.get_autotuner().pick(meta, _HEAD_DIM, op="attn")
+        spec_auto = A.AttnSparsitySpec(mask=mask, block=_BLOCK,
+                                       backend="auto", interpret=True)
+        rng = np.random.default_rng(0)
+        q, k, v = (jnp.asarray(rng.standard_normal((1, seq, 2, _HEAD_DIM)),
+                               jnp.float32) for _ in range(3))
+        scale = _HEAD_DIM ** -0.5
+
+        def attn(backend):
+            spec = A.AttnSparsitySpec(mask=mask, block=_BLOCK,
+                                      backend=backend, interpret=True)
+            return jax.jit(lambda q, k, v: A.block_sparse_attention(
+                q, k, v, spec))
+
+        out_f = attn("fused")(q, k, v)
+        out_c = attn("pallas")(q, k, v)
+        out_d = _dense_masked(q, k, v, mask, scale)
+        err = max(float(jnp.max(jnp.abs(out_f - out_d))),
+                  float(jnp.max(jnp.abs(out_c - out_d))))
+        fused_s = _time_fn(attn("fused"), q, k, v)
+        composed_s = _time_fn(attn("pallas"), q, k, v)
+        dense_s = _time_fn(jax.jit(lambda q, k, v: _dense_masked(
+            q, k, v, mask, scale)), q, k, v)
+
+        # deterministic peak-workspace estimates (bytes per head instance):
+        # composed materializes f32 scores AND probs between its three
+        # launches; fused keeps per-block-row VMEM running state only
+        composed_ws = 2 * meta.nnzb * h * w * 4
+        dpad = max(-(-_HEAD_DIM // 128), 1) * 128
+        fused_ws = h * (2 * 128 + dpad) * 4
+        row = {
+            "name": name,
+            "seq_len": seq,
+            "fingerprint": fp.key(),
+            "nnzb": meta.nnzb,
+            "max_bpr": meta.max_bpr,
+            "attn_pick": pick.variant,
+            "attn_impl": A.resolve_attn_impl(spec_auto, seq, _HEAD_DIM),
+            "composed_workspace_bytes": composed_ws,
+            "fused_state_bytes": fused_ws,
+            "workspace_ratio": round(composed_ws / fused_ws, 2),
+            "bitwise_equal": bool(jnp.all(out_f == out_c)),
+            "matches_oracle": err < 1e-4,
+            "fused_us": round(fused_s * 1e6, 2),
+            "composed_us": round(composed_s * 1e6, 2),
+            "dense_oracle_us": round(dense_s * 1e6, 2),
+        }
+        rows.append(row)
+        print(f"{name:>18}: impl={row['attn_impl']} "
+              f"fused {row['fused_us']}us / composed {row['composed_us']}us "
+              f"/ dense {row['dense_oracle_us']}us, "
+              f"workspace {row['workspace_ratio']}x, "
+              f"bitwise={row['bitwise_equal']}", file=sys.stderr)
+    return {"bench": "attention", "mode": "smoke" if smoke else "full",
+            "cases": rows}
+
+
+def diff(result: dict, baseline: dict) -> int:
+    """Regression diff.  Hard gates are the deterministic fields plus the
+    two correctness bits; timings are report-only (README policy)."""
+    got = {c["name"]: c for c in result["cases"]}
+    want = {c["name"]: c for c in baseline["cases"]}
+    attn_family = set(autotune.variant_names("attn"))
+    failures = []
+    for name in sorted(set(want) - set(got)):
+        failures.append(f"case disappeared vs baseline: {name}")
+    for name, c in got.items():
+        if not c["fingerprint"].startswith("v6|op=attn|"):
+            failures.append(f"{name}: fingerprint not in the v6 op=attn "
+                            f"key space: {c['fingerprint']}")
+        if c["attn_pick"] not in attn_family:
+            failures.append(f"{name}: pick {c['attn_pick']!r} is not an "
+                            f"attn-family variant {attn_family}")
+        if not c["bitwise_equal"]:
+            failures.append(f"{name}: fused forward is NOT bit-for-bit "
+                            f"equal to the composed path")
+        if not c["matches_oracle"]:
+            failures.append(f"{name}: drifted off the dense-masked oracle")
+        base = want.get(name)
+        if base is None:
+            print(f"note: new case not in baseline: {name}", file=sys.stderr)
+            continue
+        for field in ("nnzb", "max_bpr", "fingerprint",
+                      "composed_workspace_bytes", "fused_state_bytes"):
+            if base[field] != c[field]:
+                failures.append(f"{name}: deterministic field {field!r} "
+                                f"changed {base[field]} -> {c[field]}")
+        if base["attn_pick"] != c["attn_pick"]:
+            print(f"note: {name} pick changed {base['attn_pick']} -> "
+                  f"{c['attn_pick']} (analytic model; informational)",
+                  file=sys.stderr)
+    if failures:
+        print("ATTENTION REGRESSION:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print(f"attention diff OK: {len(got)} cases, deterministic fields "
+          f"stable", file=sys.stderr)
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--diff", default=None)
+    args = ap.parse_args()
+    result = run(smoke=args.smoke)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1, sort_keys=True)
+        print(f"wrote {args.out}", file=sys.stderr)
+    if args.diff:
+        with open(args.diff) as f:
+            baseline = json.load(f)
+        return diff(result, baseline)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

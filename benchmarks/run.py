@@ -4,7 +4,8 @@ CI suite mode (the single entrypoint the ``benchmark-smoke`` job runs):
 
   python benchmarks/run.py --smoke --diff-all
 
-runs every gated benchmark (autotune, reorder, shard_scaling, sddmm),
+runs every gated benchmark (autotune, reorder, shard_scaling, sddmm,
+attention),
 writes one ``BENCH_<name>.json`` each (a single combined artifact for CI),
 diffs each against its committed ``benchmarks/BENCH_<name>.baseline.json``,
 and exits nonzero if ANY diff fails.  Refresh a baseline with the
@@ -46,6 +47,7 @@ SUITE = (
     ("bench_reorder", "BENCH_reorder.baseline.json"),
     ("bench_shard_scaling", "BENCH_shard_scaling.baseline.json"),
     ("bench_sddmm", "BENCH_sddmm.baseline.json"),
+    ("bench_attention", "BENCH_attention.baseline.json"),
 )
 
 # report-only paper-figure modules (never gated; run via --figures)

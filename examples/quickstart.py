@@ -100,8 +100,12 @@ print(f"model-path sharded layer: y {y.shape}, per-shard auto picks {picks}")
 # sampled on a static BCSR mask (ops.sddmm — SpMM's dual, with its own
 # custom VJP), masked block softmax, then probs @ V through ops.spmm.
 # Masks are pure functions of (spec, seq_len, block), so the static-meta
-# pipeline autotunes both ops per mask structure (v5 op= fingerprints:
-# the SDDMM pick can never alias the SpMM pick for the same mask).
+# pipeline autotunes per mask structure (v6 op= fingerprints: sddmm,
+# spmm, and attn picks can never alias for the same mask).  Since PR 6
+# backend="auto" also arbitrates the WHOLE layer through the op=attn
+# family: for this banded mask it resolves to the FUSED one-kernel path
+# (single launch, scores/probs never materialized) — bit-for-bit equal
+# to the composed triple in f32.
 from repro.models import attention as A
 rngq = np.random.default_rng(3)
 q, k, v = (jnp.asarray(rngq.standard_normal((1, 128, 4, 16)), jnp.float32)
@@ -111,6 +115,10 @@ aspec = A.AttnSparsitySpec(mask=A.banded(48), block=(16, 16),
 out = A.block_sparse_attention(q, k, v, aspec)
 mmeta = A.attention_mask_meta(aspec.mask, 128, aspec.block)
 rep = A.attention_mask_report(aspec, 128)
+out_composed = A.block_sparse_attention(
+    q, k, v, A.AttnSparsitySpec(mask=aspec.mask, block=aspec.block,
+                                backend="xla"))
+assert bool(jnp.all(out == out_composed))     # fused == composed, bitwise
 # oracle: dense attention under the same banded mask
 pos = jnp.arange(128)
 ok_mask = A.mask_allowed(aspec.mask, pos, pos)
@@ -120,7 +128,9 @@ want = jnp.einsum("bhls,bshd->blhd", p, v)
 err = float(jnp.max(jnp.abs(out - want)))
 print(f"block-sparse attention: mask nnzb={mmeta.nnzb} "
       f"({rep['block_density_vs_causal']:.0%} of dense-causal blocks), "
+      f"impl={rep['attn_impl']} (pick {rep['attn_pick']}), "
       f"picks sddmm={rep['sddmm_pick']} spmm={rep['spmm_pick']}, "
       f"max err vs dense-masked {err:.2e}")
+assert rep["attn_impl"] == "fused" and rep["attn_pick"] == "attn_fused"
 assert err < 1e-4
 print("OK")

@@ -101,15 +101,19 @@ class AttnSparsitySpec:
 
     ``mask`` is the static pattern; ``block`` the BCSR tile of the score
     matrix (lane/sublane-aligned on real TPUs, anything in interpret
-    mode).  ``backend`` feeds BOTH ops — with ``"auto"`` the SDDMM and the
-    SpMM resolve independently from their own v5 fingerprint families.
-    ``shards > 0`` row-partitions the score structure through
-    ``launch.dist_spmm`` for the context product (shard_map under a
-    compatible ambient mesh from ``dist_spmm.use_spmm_mesh``, identical
-    in-process math otherwise)."""
+    mode).  ``backend`` feeds BOTH ops — with ``"auto"`` the attention
+    layer first arbitrates fused-vs-composed through the ``op="attn"``
+    family, then (composed) the SDDMM and the SpMM resolve independently
+    from their own v6 fingerprint families; ``"fused"`` forces the
+    single-launch ``kernels.bcsr_attn`` path (bit-for-bit equal forward,
+    composed backward).  ``shards > 0`` row-partitions the score
+    structure through ``launch.dist_spmm`` for the context product
+    (shard_map under a compatible ambient mesh from
+    ``dist_spmm.use_spmm_mesh``, identical in-process math otherwise) —
+    sharded specs always run composed."""
     mask: AttnMaskSpec = dataclasses.field(default_factory=blockwise_causal)
     block: Tuple[int, int] = (16, 16)
-    backend: str = "auto"           # pallas | row_loop | xla | dense | auto
+    backend: str = "auto"   # pallas | row_loop | xla | dense | auto | fused
     bn: int = 512
     interpret: bool = False
     shards: int = 0                 # >0: row-shard the score structure

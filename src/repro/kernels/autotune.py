@@ -52,7 +52,7 @@ class KernelVariant:
     """One dispatchable kernel schedule.
 
     ``op`` names the compute family the variant belongs to (``"spmm"`` |
-    ``"sddmm"`` — picks never cross families); ``backend`` is the
+    ``"sddmm"`` | ``"attn"`` — picks never cross families); ``backend`` is the
     ``ops.SpmmConfig.backend`` string the variant lowers to; ``model_time``
     maps (meta, n, bn) -> predicted seconds (paper Eq. 1 terms from
     ``core.perf_model``); ``supported`` gates dispatch on static metadata
@@ -186,6 +186,43 @@ register_variant(KernelVariant(
     description="dense-masked X Y^T + block gather (near-dense structures)"))
 
 
+# Attention family (models.attention.block_sparse_attention under
+# ``backend="auto"``): fused one-kernel flash-style path vs the composed
+# SDDMM -> softmax -> SpMM triple.  These are attention-LEVEL variants —
+# their ``backend`` strings ("fused" / "composed") are resolved by
+# ``models.attention.resolve_attn_impl``, not by ``ops.SpmmConfig``.
+def _t_attn_fused(meta: ops.SparseMeta, n: int, bn: int) -> float:
+    # one launch, three passes (max / denom / accumulate) over the static
+    # (block-row x slot) schedule — row_loop-style waste on short rows,
+    # but zero scores/probs HBM traffic between phases
+    h, w = meta.block
+    n_e = meta.n_block_rows * max(meta.max_bpr, 1) * 3
+    return pm.spmm_model_time(n_e, h, w, n)
+
+
+def _t_attn_composed(meta: ops.SparseMeta, n: int, bn: int) -> float:
+    # skew-immune streamed SDDMM + SpMM, plus the materialized [nnzb,h,w]
+    # scores/probs tensors crossing HBM twice each between the three
+    # launches (write+read for scores, write+read for probs), plus the
+    # two extra launch latencies
+    h, w = meta.block
+    t = _t_sddmm_stream(meta, n, bn) + _t_nnz_stream(meta, n, bn)
+    probs_bytes = 4.0 * meta.nnzb * h * w
+    return t + 4.0 * probs_bytes / pm.HBM_BW + 2 * 5e-6
+
+
+register_variant(KernelVariant(
+    name="attn_fused", backend="fused", op="attn",
+    bn_candidates=(512,), model_time=_t_attn_fused,
+    supported=lambda meta: meta.max_bpr > 0,
+    description="single-launch fused SDDMM+softmax+SpMM (flash-style, "
+                "O(L*d) memory)"))
+register_variant(KernelVariant(
+    name="attn_composed", backend="composed", op="attn",
+    bn_candidates=(512,), model_time=_t_attn_composed,
+    description="three-dispatch composed path (materializes scores/probs)"))
+
+
 # --------------------------------------------------------------- fingerprint
 def _pow2_bucket(x: int) -> int:
     return 1 << max(int(x) - 1, 0).bit_length() if x > 0 else 0
@@ -210,7 +247,11 @@ class Fingerprint:
     the compute family: ``ops.spmm`` and ``ops.sddmm`` dispatch over the
     SAME structures with different optimal schedules (SDDMM contracts
     over the bn-tiled N axis instead of streaming it), so their picks
-    must never alias."""
+    must never alias.  v6 adds the ``attn`` family (fused one-kernel
+    attention vs the composed triple — a third disjoint pick space over
+    the same structures) and bumps the key prefix so v5 caches, which
+    predate the family split, are invalidated wholesale rather than
+    partially reused."""
     n_block_rows: int
     n_block_cols: int
     block: Tuple[int, int]
@@ -221,11 +262,11 @@ class Fingerprint:
     reorder: str = "identity"
     n_shards: int = 1    # shard count of the partitioned operand (1 = whole)
     max_bpr: int = 0     # row_loop schedule bound (0 = unknown/dims-only)
-    op: str = "spmm"     # compute family (spmm | sddmm)
+    op: str = "spmm"     # compute family (spmm | sddmm | attn)
 
     def key(self) -> str:
         h, w = self.block
-        return (f"v5|op={self.op}"
+        return (f"v6|op={self.op}"
                 f"|nbr={self.n_block_rows}|nbc={self.n_block_cols}"
                 f"|b={h}x{w}|nnzb={self.nnzb}|pad={self.pad_bucket}"
                 f"|skew={self.skew_bucket}|n={self.n_bucket}"
@@ -250,8 +291,8 @@ def fingerprint(meta: ops.SparseMeta, n: int,
                 op: str = "spmm") -> Fingerprint:
     """Fingerprint from the static meta ``prepare_sparse`` built (or a
     per-shard meta from ``dist_spmm.prepare_sharded`` — its ``n_shards``
-    and ``max_bpr`` ride into the v5 key).  ``op`` selects the compute
-    family's key space (``spmm`` | ``sddmm``)."""
+    and ``max_bpr`` ride into the v6 key).  ``op`` selects the compute
+    family's key space (``spmm`` | ``sddmm`` | ``attn``)."""
     return _make_fingerprint(meta.n_block_rows, meta.n_block_cols,
                              meta.block, meta.nnzb,
                              meta.padding_ratio_pct, meta.bpr_cv_pct, n,
@@ -299,7 +340,10 @@ class KernelChoice:
 
 def default_variant(op: str = "spmm") -> str:
     """The hardcoded pre-registry default of one compute family — the
-    baseline every pick must beat."""
+    baseline every pick must beat.  For ``attn`` that is the composed
+    triple: the fused kernel must WIN the model comparison to dispatch."""
+    if op == "attn":
+        return "attn_composed"
     return DEFAULT_VARIANT if op == "spmm" else "sddmm_stream"
 
 
@@ -367,7 +411,7 @@ class Autotuner:
     >>> choice = tuner.pick(meta, n=128)
     >>> choice.variant in autotune.variant_names()
     True
-    >>> tuner.pick(meta, n=128) is choice     # cached under the v4 key
+    >>> tuner.pick(meta, n=128) is choice     # cached under the v6 key
     True
     """
 
@@ -421,8 +465,8 @@ class Autotuner:
              op: str = "spmm") -> KernelChoice:
         """Cached choice for this structure, analytic on a miss.  Static
         info only — safe inside jit traces (``backend="auto"`` path).
-        ``op`` selects the variant family (``spmm`` | ``sddmm``) and its
-        disjoint v5 key space."""
+        ``op`` selects the variant family (``spmm`` | ``sddmm`` | ``attn``)
+        and its disjoint v6 key space."""
         fp = fingerprint(meta, n, op=op)
         hit = self.get(fp)
         if hit is not None:
@@ -447,7 +491,7 @@ class Autotuner:
         Always measures the family's hardcoded default (``nnz_stream`` /
         ``sddmm_stream``, bn=512) so the winner is never slower than it;
         returns (choice, {candidate: sec}).  The winner is cached (and
-        persisted) under the matrix's v5 ``op=``-scoped fingerprint.
+        persisted) under the matrix's v6 ``op=``-scoped fingerprint.
         ``reorder`` mirrors the ``prepare_sparse`` arguments so the sweep
         measures (and the fingerprint matches) the permuted structure the
         apply path will actually dispatch on.  For ``op="sddmm"`` the

@@ -509,7 +509,7 @@ def resolve_backend(backend: str, bn: int, meta: SparseMeta,
     time; a cache miss falls back to the analytic perf-model pick (timed
     sweeps only happen via explicit ``autotune.Autotuner.tune`` calls).
     ``op`` selects the variant family (``"spmm"`` | ``"sddmm"``) — the two
-    share backend strings but fingerprint separately (v5 ``op=`` field),
+    share backend strings but fingerprint separately (v6 ``op=`` field),
     so an SpMM pick can never alias an SDDMM one.
     """
     if backend == "auto":
@@ -586,7 +586,7 @@ def sddmm(arrays: SparseArrays, meta: SparseMeta, x: jnp.ndarray,
     custom VJPs (to any order on the pure-jnp ``xla`` backend; the
     Pallas leaf kernels have no JVP rule, capping the order there).
     ``backend="auto"`` resolves through the
-    ``repro.kernels.autotune`` SDDMM variant family (v5 ``op=sddmm``
+    ``repro.kernels.autotune`` SDDMM variant family (v6 ``op=sddmm``
     fingerprints — never aliased with SpMM picks).
 
     Example (sampled product vs the dense masked oracle):

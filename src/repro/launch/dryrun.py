@@ -254,12 +254,14 @@ def sparse_attention_report(cfg, seq_len: int = 512) -> dict:
     """Mask structure + autotune picks of the arch's block-sparse attention
     (``ModelConfig.attn_sparsity``) — empty when the arch has none.
 
-    Reports the mask nnzb / block density vs dense-causal and the v5
-    ``op=sddmm`` (score) + ``op=spmm`` (context) picks the spec's backend
-    resolves for a ``seq_len`` sequence at the arch's REAL head dim (the
-    contraction width the runtime ops fingerprint with) — the attention
-    twin of ``sparse_shard_report``, derived entirely from static metas
-    (the PR-4/PR-5 pipeline: no params, no arrays)."""
+    Reports the mask nnzb / block density vs dense-causal, the
+    attention-level fused-vs-composed resolution (v6 ``op=attn`` family —
+    the PR-6 one-kernel path), and the composed ``op=sddmm`` (score) +
+    ``op=spmm`` (context) picks the spec's backend resolves for a
+    ``seq_len`` sequence at the arch's REAL head dim (the contraction
+    width the runtime ops fingerprint with) — the attention twin of
+    ``sparse_shard_report``, derived entirely from static metas (the
+    PR-4/PR-5 pipeline: no params, no arrays)."""
     spec = getattr(cfg, "attn_sparsity", None)
     if spec is None:
         return {}
@@ -315,7 +317,9 @@ def main(argv=None):
             print(f"[dryrun] {cfg.name} sparse attention mask: "
                   f"{attn_rep['mask']['kind']} nnzb={attn_rep['nnzb']} "
                   f"({attn_rep['block_density_vs_causal']}x of dense-causal "
-                  f"blocks at seq {attn_rep['seq_len']}), picks "
+                  f"blocks at seq {attn_rep['seq_len']}), "
+                  f"impl={attn_rep['attn_impl']} "
+                  f"(attn={attn_rep['attn_pick']}), picks "
                   f"sddmm={attn_rep['sddmm_pick']} "
                   f"spmm={attn_rep['spmm_pick']}")
             records.append({"arch": cfg.name, "status": "sparse_attention",

@@ -13,11 +13,21 @@ Gradients need no extra code: SpMM and SDDMM are mutual duals (each op's
 custom VJP calls the other), so d(ctx)/d{Q,K,V} bounces between the two
 Pallas kernels exactly like the dense math would between its two GEMMs.
 
+Since PR 6 the three dispatches also exist as ONE kernel:
+``kernels.bcsr_attn.bcsr_attn_fused`` recomputes the score blocks inside
+a single Pallas launch and folds them into per-query-block running
+(max, sum, accumulator) state — O(L * d) memory, no materialized scores
+or probs.  ``backend="auto"`` arbitrates fused vs composed through the
+``op="attn"`` autotune family (v6 fingerprints — fused and composed
+picks never alias); ``backend="fused"`` forces it.  The fused forward is
+bit-for-bit equal to the composed path in f32, which lets the backward
+stay on the composed dual-VJP route (no fused backward).
+
 Masks are STATIC (a pure function of ``(mask_spec, seq_len, block)``), so
 the whole PR-4 static-metadata pipeline applies: ``attention_mask_meta``
 memoizes the true structure meta — nnzb, ``max_bpr``, skew — without
 building arrays, ``backend="auto"`` resolves the SDDMM and SpMM variants
-per layer from the v5 fingerprints, and scanned layer stacks merge their
+per layer from the v6 fingerprints, and scanned layer stacks merge their
 per-layer metas with ``core.sparse_linear.merge_sparse_metas``.  The index
 arrays themselves are trace-time constants, never params — a mask has no
 gradient.
@@ -49,7 +59,7 @@ from repro.core.attention_mask import (NEG_INF, AttnMaskSpec,  # noqa: F401
                                        blockwise_causal, local_global,
                                        mask_allowed)
 from repro.core.sparse_linear import merge_sparse_metas
-from repro.kernels import ops
+from repro.kernels import bcsr_attn, ops
 
 
 def decode_mask_bias(spec: AttnMaskSpec, q_pos: jnp.ndarray,
@@ -102,9 +112,9 @@ def attention_mask_meta(spec: AttnMaskSpec, seq_len: int,
                         block: Tuple[int, int]) -> ops.SparseMeta:
     """TRUE structure meta of the mask — ``prepare_sparse_meta`` on the
     deterministic mask BCSR, memoized.  This is what ``backend="auto"``
-    fingerprints (v5, both the ``op=sddmm`` score pick and the ``op=spmm``
-    context pick) and what ``launch.dryrun`` reports, with no arrays
-    built."""
+    fingerprints (v6: the ``op=attn`` fused-vs-composed pick plus the
+    composed path's ``op=sddmm`` / ``op=spmm`` picks) and what
+    ``launch.dryrun`` reports, with no arrays built."""
     return ops.prepare_sparse_meta(attention_mask_bcsr(spec, seq_len, block))
 
 
@@ -225,6 +235,118 @@ def _context_spmm(probs: jnp.ndarray, arrays: ops.SparseArrays,
                     interpret=spec.interpret)
 
 
+def _composed_spec(spec: AttnSparsitySpec) -> AttnSparsitySpec:
+    """The spec the composed three-dispatch path runs under:
+    ``backend="fused"`` is an attention-level choice the SDDMM/SpMM ops
+    don't know — normalize it to ``"auto"`` for them."""
+    if spec.backend == "fused":
+        return dataclasses.replace(spec, backend="auto")
+    return spec
+
+
+def _composed_heads(qf: jnp.ndarray, kf: jnp.ndarray, vf: jnp.ndarray,
+                    spec: AttnSparsitySpec, scale: float,
+                    cap: Optional[float]) -> jnp.ndarray:
+    """SDDMM -> block softmax -> SpMM over folded ``[G, L, d]`` heads —
+    the three-dispatch reference path (and the backward route of the
+    fused forward)."""
+    L = qf.shape[1]
+    spec = _composed_spec(spec)
+    arrays, meta = attention_mask_arrays(spec.mask, L, spec.block)
+    # host constants: valid = stored-and-allowed AND not a padding entry
+    elem_mask = (arrays.vals > 0.5) & arrays.real_mask[:, None, None]
+
+    def one_head(qi, ki, vi):
+        scores = ops.sddmm(arrays, meta, qi, ki, backend=spec.backend,
+                           bn=spec.bn, interpret=spec.interpret,
+                           out_dtype=jnp.float32)
+        probs = block_softmax(scores * scale, elem_mask, arrays.row_ids,
+                              meta.n_block_rows, cap=cap)
+        return _context_spmm(probs, arrays, meta, vi, spec)
+
+    return jax.vmap(one_head)(qf, kf, vf)
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_inputs(spec: AttnMaskSpec, seq_len: int, block: Tuple[int, int]):
+    """Host constants for the fused kernel: the 0/1 element-mask blocks
+    and the static (block-row x slot) schedule (padding slots -> the
+    sentinel index ``nnzb`` — the host twin of
+    ``ops._sddmm_row_loop_schedule``).  Memoized like the other mask
+    pipelines; numpy, so trace-safe as closed-over constants."""
+    arrays, meta = attention_mask_arrays(spec, seq_len, block)
+    emask = ((arrays.vals > 0.5) &
+             arrays.real_mask[:, None, None]).astype(np.float32)
+    nnzb = arrays.row_ids.shape[0]
+    counts = np.bincount(arrays.row_ids, minlength=meta.n_block_rows)
+    rowptr = np.concatenate([[0], np.cumsum(counts)])
+    slot = np.arange(nnzb) - rowptr[arrays.row_ids]
+    pos = arrays.row_ids * meta.max_bpr + slot
+    flat_idx = np.full(meta.n_block_rows * meta.max_bpr, nnzb, np.int32)
+    flat_col = np.zeros(meta.n_block_rows * meta.max_bpr, np.int32)
+    flat_idx[pos] = np.arange(nnzb, dtype=np.int32)
+    flat_col[pos] = arrays.col_ids
+    return emask, flat_idx, flat_col, meta
+
+
+def _fused_heads(qf: jnp.ndarray, kf: jnp.ndarray, vf: jnp.ndarray,
+                 spec: AttnSparsitySpec, scale: float,
+                 cap: Optional[float]) -> jnp.ndarray:
+    emask, flat_idx, flat_col, meta = _fused_inputs(
+        spec.mask, qf.shape[1], spec.block)
+    return bcsr_attn.bcsr_attn_fused(
+        qf, kf, vf, emask, flat_idx, flat_col,
+        n_block_rows=meta.n_block_rows, n_block_cols=meta.n_block_cols,
+        block=meta.block, scale=scale, cap=cap, bn=spec.bn,
+        out_dtype=jnp.float32, interpret=spec.interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _attn_fused(spec: AttnSparsitySpec, scale: float, cap: Optional[float],
+                qf: jnp.ndarray, kf: jnp.ndarray, vf: jnp.ndarray):
+    """Fused forward, composed backward.  The statics (spec, scale, cap)
+    are hashable nondiff args; the bit-for-bit forward pin is what makes
+    differentiating THROUGH the composed path consistent with the fused
+    primal."""
+    return _fused_heads(qf, kf, vf, spec, scale, cap)
+
+
+def _attn_fused_fwd(spec, scale, cap, qf, kf, vf):
+    return _fused_heads(qf, kf, vf, spec, scale, cap), (qf, kf, vf)
+
+
+def _attn_fused_bwd(spec, scale, cap, res, g):
+    qf, kf, vf = res
+    _, vjp = jax.vjp(
+        lambda a, b, c: _composed_heads(a, b, c, spec, scale, cap),
+        qf, kf, vf)
+    return vjp(g)
+
+
+_attn_fused.defvjp(_attn_fused_fwd, _attn_fused_bwd)
+
+
+def resolve_attn_impl(spec: AttnSparsitySpec, seq_len: int,
+                      head_dim: int) -> str:
+    """``"fused"`` | ``"composed"`` — the attention-level dispatch.
+
+    Explicit kernel backends (``xla``/``pallas``/...) and sharded score
+    paths stay composed; ``backend="fused"`` forces the fused kernel;
+    ``backend="auto"`` consults the ``op="attn"`` autotune family (v6
+    fingerprints, disjoint from the sddmm/spmm key spaces).  Static info
+    only — trace-safe."""
+    if spec.shards > 0 or spec.backend not in ("auto", "fused"):
+        return "composed"
+    meta = attention_mask_meta(spec.mask, seq_len, spec.block)
+    if meta.max_bpr <= 0:
+        return "composed"   # no static schedule bound -> no fused walk
+    if spec.backend == "fused":
+        return "fused"
+    from repro.kernels import autotune  # local import: layering
+    choice = autotune.get_autotuner().pick(meta, head_dim, op="attn")
+    return "fused" if choice.variant == "attn_fused" else "composed"
+
+
 def block_sparse_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                            spec: AttnSparsitySpec, *,
                            scale: Optional[float] = None,
@@ -235,9 +357,14 @@ def block_sparse_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     returns  [B, L, H, d] in f32 (callers cast), matching the dense-masked
              reference on the mask support.
 
-    The per-(batch, head) instance is SDDMM -> block softmax -> SpMM; the
-    fold over (B, H) is a ``vmap`` over the two custom-VJP ops with the
-    mask structure closed over as constants.
+    The per-(batch, head) instance is SDDMM -> block softmax -> SpMM —
+    either as three dispatches (``vmap`` over the two custom-VJP ops with
+    the mask structure closed over as constants), or, when
+    ``resolve_attn_impl`` picks the fused path (``backend="auto"`` via
+    the ``op="attn"`` v6 autotune family, or ``backend="fused"``), as ONE
+    Pallas launch (``kernels.bcsr_attn.bcsr_attn_fused``) whose forward
+    is bit-for-bit equal in f32 and whose backward reuses the composed
+    dual-VJP route.
 
     >>> import numpy as np, jax.numpy as jnp
     >>> from repro.models import attention as A
@@ -254,23 +381,18 @@ def block_sparse_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     True
     """
     B, L, H, d = q.shape
-    scale = d ** -0.5 if scale is None else scale
-    arrays, meta = attention_mask_arrays(spec.mask, L, spec.block)
-    # host constants: valid = stored-and-allowed AND not a padding entry
-    elem_mask = (arrays.vals > 0.5) & arrays.real_mask[:, None, None]
-
-    def one_head(qi, ki, vi):
-        scores = ops.sddmm(arrays, meta, qi, ki, backend=spec.backend,
-                           bn=spec.bn, interpret=spec.interpret,
-                           out_dtype=jnp.float32)
-        probs = block_softmax(scores * scale, elem_mask, arrays.row_ids,
-                              meta.n_block_rows, cap=cap)
-        return _context_spmm(probs, arrays, meta, vi, spec)
-
+    # normalize to plain python floats so both paths scale/cap with the
+    # SAME weak-typed constants (bit-for-bit pin) and the fused op's
+    # nondiff args stay hashable
+    scale = float(d ** -0.5 if scale is None else scale)
+    cap = None if cap is None else float(cap)
     qf = q.transpose(0, 2, 1, 3).reshape(B * H, L, d).astype(jnp.float32)
     kf = k.transpose(0, 2, 1, 3).reshape(B * H, L, d).astype(jnp.float32)
     vf = v.transpose(0, 2, 1, 3).reshape(B * H, L, d).astype(jnp.float32)
-    ctx = jax.vmap(one_head)(qf, kf, vf)                   # [B*H, L, d]
+    if resolve_attn_impl(spec, L, d) == "fused":
+        ctx = _attn_fused(spec, scale, cap, qf, kf, vf)    # [B*H, L, d]
+    else:
+        ctx = _composed_heads(qf, kf, vf, spec, scale, cap)
     return ctx.reshape(B, H, L, d).transpose(0, 2, 1, 3)
 
 
@@ -278,8 +400,9 @@ def block_sparse_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 def attention_mask_report(spec: AttnSparsitySpec, seq_len: int,
                           head_dim: int = 0) -> dict:
     """Mask structure + kernel picks for the dry-run: nnzb, block density
-    vs dense causal, and the v5 ``op=sddmm`` / ``op=spmm`` picks the
-    spec's backend resolves at this sequence length.
+    vs dense causal, the attention-level fused-vs-composed resolution,
+    and the v6 ``op=attn`` / ``op=sddmm`` / ``op=spmm`` picks the spec's
+    backend resolves at this sequence length.
 
     ``head_dim`` is the contraction width the runtime ops actually
     fingerprint with (both the SDDMM's N axis and the context SpMM's
@@ -289,10 +412,13 @@ def attention_mask_report(spec: AttnSparsitySpec, seq_len: int,
     nbr = meta.n_block_rows
     causal_blocks = nbr * (nbr + 1) // 2
     head_n = head_dim or meta.block[1]
-    sddmm_be = ops.resolve_backend(spec.backend, spec.bn, meta, head_n,
+    cspec = _composed_spec(spec)
+    sddmm_be = ops.resolve_backend(cspec.backend, cspec.bn, meta, head_n,
                                    op="sddmm")
-    spmm_be = ops.resolve_backend(spec.backend, spec.bn, meta, head_n,
+    spmm_be = ops.resolve_backend(cspec.backend, cspec.bn, meta, head_n,
                                   op="spmm")
+    from repro.kernels import autotune  # local import: layering
+    attn_choice = autotune.get_autotuner().pick(meta, head_n, op="attn")
     return {
         "mask": dataclasses.asdict(spec.mask),
         "block": list(meta.block),
@@ -301,6 +427,8 @@ def attention_mask_report(spec: AttnSparsitySpec, seq_len: int,
         "max_bpr": meta.max_bpr,
         "block_density_vs_causal": round(meta.nnzb / max(causal_blocks, 1),
                                          4),
+        "attn_impl": resolve_attn_impl(spec, seq_len, head_n),
+        "attn_pick": attn_choice.variant,
         "sddmm_pick": "{}/bn{}".format(*sddmm_be),
         "spmm_pick": "{}/bn{}".format(*spmm_be),
         "shards": spec.shards,

@@ -3,7 +3,7 @@
 Equivalence vs the single-device reference across shard counts {1, 2, 4, 8}
 — forward within dtype tolerance and the VJP (dvals on the real support,
 dB) — including ragged block-row counts, a partial trailing block-row, and
-empty shards; plus the shard_bins occupancy invariants, the v5 autotune
+empty shards; plus the shard_bins occupancy invariants, the v6 autotune
 fingerprint, the mixed-variant lax.switch path, and the model wiring
 (``SparsitySpec(shards=...)``).
 
@@ -160,14 +160,14 @@ def test_pre_reorder_composes_with_partition():
                                rtol=1e-5, atol=1e-4)
 
 
-# ----------------------------------------------------- fingerprint (v5)
+# ----------------------------------------------------- fingerprint (v6)
 def test_fingerprint_shard_count_no_alias():
     a = bcsr_lib.random_bcsr(0, (256, 256), (16, 16), 0.2)
     _, meta = ops.prepare_sparse(a, dtype=jnp.float32)
     sharr, smeta = dist_spmm.prepare_sharded(a, 4, dtype=jnp.float32)
     k_full = autotune.fingerprint(meta, 64).key()
     k_shard = autotune.fingerprint(smeta.shard_metas[0], 64).key()
-    assert k_full.startswith("v5|") and k_shard.startswith("v5|")
+    assert k_full.startswith("v6|") and k_shard.startswith("v6|")
     assert "ns=1" in k_full and "ns=4" in k_shard
     # the key carries the row_loop schedule bound (v4 field) — real stats
     # on both sides

@@ -1,6 +1,6 @@
 """Static structure-metadata pipeline tests (specs-vs-init contract,
 model-path heterogeneous per-shard dispatch, reorder-aware row_loop
-schedules, v5 fingerprints).
+schedules, v6 fingerprints).
 
 The contract under test: a sparse layer's TRUE structure meta is a pure
 static function of ``(seed, dims, spec)`` — ``sparse_linear_meta`` (and
@@ -130,7 +130,7 @@ def test_model_path_shard_metas_match_direct_dist_spmm():
 
 def test_model_path_shard_fingerprints_differ():
     """Regression vs the dims-only collapse: shards with different local
-    structures must reach the autotuner as DIFFERENT v5 fingerprints
+    structures must reach the autotuner as DIFFERENT v6 fingerprints
     through the model path (they used to share one zero-stats key)."""
     spec = _spec(shards=4, backend="auto")
     meta_in, meta_out = L.mlp_sparse_metas(spec, D, F, (0,))
@@ -239,4 +239,4 @@ def test_fingerprint_carries_schedule_bound():
     k0, k1 = autotune.fingerprint(meta, 64).key(), \
         autotune.fingerprint(twin, 64).key()
     assert k0 != k1
-    assert k0.startswith("v5|") and f"mb={meta.max_bpr}" in k0
+    assert k0.startswith("v6|") and f"mb={meta.max_bpr}" in k0

@@ -72,6 +72,28 @@ def test_sparse_lm_train_then_serve(tmp_path):
     assert len(done[0].out_tokens) == 3
 
 
+def test_doctest_module_list_is_live():
+    """``tests/doctest_modules.txt`` is the single source of truth for
+    which modules CI runs ``--doctest-modules`` over.  Guard it against
+    import rot: every listed file must exist AND import cleanly (a renamed
+    or deleted module would otherwise fail only in the workflow, not
+    locally), and the PR-6 fused-attention kernel must stay on the list so
+    its docstring example keeps executing as a test."""
+    import importlib
+    import os
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    listing = os.path.join(root, "tests", "doctest_modules.txt")
+    paths = [ln.strip() for ln in open(listing) if ln.strip()]
+    assert paths, "doctest_modules.txt is empty"
+    assert "src/repro/kernels/bcsr_attn.py" in paths
+    for rel in paths:
+        assert os.path.exists(os.path.join(root, rel)), \
+            f"doctest_modules.txt lists missing file {rel}"
+        assert rel.startswith("src/") and rel.endswith(".py"), rel
+        mod_name = rel[len("src/"):-len(".py")].replace("/", ".")
+        importlib.import_module(mod_name)
+
+
 def test_benchmark_modules_importable():
     """Every module benchmarks/run.py can dispatch to — the gated SUITE
     and the report-only FIGURES — must stay importable, with the expected
