@@ -39,6 +39,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import workspace
 from repro.kernels import autotune
 from repro.models import attention as A
 
@@ -79,7 +80,6 @@ def _time_fn(fn, *operands, iters=3):
 def run(smoke: bool = True) -> dict:
     autotune.set_autotuner(autotune.Autotuner())
     rows = []
-    h, w = _BLOCK
     for name, mask, seq in _cases(smoke):
         meta = A.attention_mask_meta(mask, seq, _BLOCK)
         fp = autotune.fingerprint(meta, _HEAD_DIM, op="attn")
@@ -107,12 +107,11 @@ def run(smoke: bool = True) -> dict:
         dense_s = _time_fn(jax.jit(lambda q, k, v: _dense_masked(
             q, k, v, mask, scale)), q, k, v)
 
-        # deterministic peak-workspace estimates (bytes per head instance):
-        # composed materializes f32 scores AND probs between its three
-        # launches; fused keeps per-block-row VMEM running state only
-        composed_ws = 2 * meta.nnzb * h * w * 4
-        dpad = max(-(-_HEAD_DIM // 128), 1) * 128
-        fused_ws = h * (2 * 128 + dpad) * 4
+        # deterministic peak-workspace estimates (bytes per head instance)
+        # from the shared repro.analysis.workspace estimator — the same
+        # numbers the launch verifier and dryrun reports use
+        composed_ws = workspace.attn_composed_workspace_bytes(meta)
+        fused_ws = workspace.attn_fused_state_bytes(_BLOCK, _HEAD_DIM)
         row = {
             "name": name,
             "seq_len": seq,

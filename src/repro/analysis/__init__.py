@@ -1,0 +1,20 @@
+"""Static contract analyzer: ``python -m repro.analysis``.
+
+Three passes prove the invariants the kernels and caches assume (see
+docs/ARCHITECTURE.md "Static contracts"):
+
+* ``verify_launch`` — schedule coverage / sentinel / bounds / VMEM
+  checks per meta, plus the ``REPRO_VERIFY_LAUNCH=1`` pre-dispatch hook;
+* ``lint_rules``   — AST rules over ``src/`` (traced-numpy reachability,
+  lru_cache signatures, custom_vjp pairing, frozen static-aux
+  dataclasses, fingerprint field coverage);
+* ``fingerprint_audit`` — v6 key grammar: parse, injectivity,
+  committed-artifact validation.
+
+``workspace`` holds the shared VMEM/workspace byte estimators
+(autotuner, attention benchmark, and verifier all delegate here).
+"""
+from repro.analysis.report import Finding, render
+from repro.analysis import workspace
+
+__all__ = ["Finding", "render", "workspace"]

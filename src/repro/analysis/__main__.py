@@ -1,0 +1,83 @@
+"""CLI for the static contract analyzer.
+
+  python -m repro.analysis --all            # what CI gates on
+  python -m repro.analysis --lint           # AST rules over src/ only
+  python -m repro.analysis --verify-launch  # structure-zoo launch checks
+  python -m repro.analysis --audit-fingerprints
+  python -m repro.analysis --vmem-budget 4194304
+
+Prints one ``path:line: [rule] message`` diagnostic per finding and
+exits nonzero iff any pass found one.  No flags = ``--all``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.analysis import workspace
+from repro.analysis.report import render
+
+
+def _repo_root() -> str:
+    import repro
+    # repro is a namespace package (no __init__.py): locate via __path__
+    pkg_dir = os.path.abspath(list(repro.__path__)[0])     # .../src/repro
+    return os.path.dirname(os.path.dirname(pkg_dir))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static contract analyzer: launch verification, "
+                    "repo-invariant lints, fingerprint audit")
+    ap.add_argument("--all", action="store_true",
+                    help="run every pass (default when no pass selected)")
+    ap.add_argument("--lint", action="store_true",
+                    help="AST repo-invariant rules over --src")
+    ap.add_argument("--verify-launch", action="store_true",
+                    help="schedule/grid/VMEM checks over the structure zoo")
+    ap.add_argument("--audit-fingerprints", action="store_true",
+                    help="v6 key grammar: injectivity + committed files")
+    ap.add_argument("--vmem-budget", type=int,
+                    default=workspace.DEFAULT_VMEM_BUDGET,
+                    help="VMEM budget in bytes for the launch verifier "
+                         f"(default {workspace.DEFAULT_VMEM_BUDGET})")
+    ap.add_argument("--src", default=None,
+                    help="source tree for --lint (default: the installed "
+                         "repro package's parent src/)")
+    args = ap.parse_args(argv)
+
+    run_all = args.all or not (args.lint or args.verify_launch
+                               or args.audit_fingerprints)
+    findings = []
+    if run_all or args.lint:
+        from repro.analysis import lint_rules
+        src = args.src if args.src else os.path.join(_repo_root(), "src")
+        n0 = len(findings)
+        findings += lint_rules.lint_tree(src)
+        print(f"lint: {len(findings) - n0} finding(s) over {src}",
+              file=sys.stderr)
+    if run_all or args.verify_launch:
+        from repro.analysis import verify_launch
+        n0 = len(findings)
+        findings += verify_launch.run_verify(vmem_budget=args.vmem_budget)
+        print(f"verify-launch: {len(findings) - n0} finding(s) over the "
+              "structure zoo", file=sys.stderr)
+    if run_all or args.audit_fingerprints:
+        from repro.analysis import fingerprint_audit
+        n0 = len(findings)
+        findings += fingerprint_audit.run_audit(_repo_root())
+        print(f"fingerprint-audit: {len(findings) - n0} finding(s)",
+              file=sys.stderr)
+
+    if findings:
+        print(render(findings))
+        print(f"FAIL: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print("OK: all static contracts hold", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,190 @@
+"""v6 fingerprint-grammar audit: parse, prove injectivity, validate files.
+
+The autotune cache key is a flat string (``Fingerprint.key()``); nothing
+at runtime ever parses it back, so a grammar bug — a field dropped from
+the template, two fields that can collide textually, a stale cache from
+an older grammar — would surface as silently-aliased picks, not an
+error.  This pass closes that hole three ways:
+
+* ``parse_key`` — a strict grammar for the v6 key; round-tripping
+  ``parse_key(fp.key()) == fp`` proves the rendering is lossless.
+  Keys from the retired v1-v5 grammars raise ``StaleKeyError`` with the
+  refresh command instead of a generic parse failure.
+* ``audit_injectivity`` — over ops x reorders x shard counts x a sampled
+  structure space (plus every structure-zoo meta), distinct fingerprints
+  must render to distinct keys and every key must round-trip.
+* ``audit_files`` — every committed artifact that embeds keys (the
+  ``BENCH_*.baseline.json`` fingerprints, any autotune cache JSON with
+  the ``{"version": 1, "entries": {key: {variant, ...}}}`` shape) must
+  parse under the current grammar, with each cached variant still
+  registered.
+
+>>> from repro.kernels import autotune
+>>> fp = autotune._make_fingerprint(4, 4, (16, 16), 8, 25, 40, 512)
+>>> parse_key(fp.key()) == fp
+True
+>>> parse_key("v5|op=spmm|nbr=4")  # doctest: +IGNORE_EXCEPTION_DETAIL
+Traceback (most recent call last):
+    ...
+StaleKeyError: stale fingerprint grammar v5 (current: v6) in key ...
+"""
+from __future__ import annotations
+
+import glob
+import itertools
+import json
+import os
+import re
+
+from repro.analysis.report import Finding
+
+_KEY_RE = re.compile(
+    r"^v6\|op=(?P<op>[a-z_]+)\|nbr=(?P<nbr>\d+)\|nbc=(?P<nbc>\d+)"
+    r"\|b=(?P<h>\d+)x(?P<w>\d+)\|nnzb=(?P<nnzb>\d+)\|pad=(?P<pad>\d+)"
+    r"\|skew=(?P<skew>\d+)\|n=(?P<n>\d+)\|ro=(?P<ro>[A-Za-z0-9_]+)"
+    r"\|ns=(?P<ns>\d+)\|mb=(?P<mb>\d+)$")
+
+_STALE_RE = re.compile(r"^v(\d+)\|")
+
+_OPS = ("spmm", "sddmm", "attn")
+
+
+class StaleKeyError(ValueError):
+    """A key from a retired (v1-v5) fingerprint grammar."""
+
+
+def parse_key(key: str):
+    """Strict inverse of ``Fingerprint.key()`` — returns the Fingerprint
+    or raises (``StaleKeyError`` for old grammar versions, ``ValueError``
+    for anything else malformed)."""
+    from repro.kernels import autotune
+    m = _KEY_RE.match(key)
+    if m is None:
+        sv = _STALE_RE.match(key)
+        if sv and int(sv.group(1)) < 6:
+            raise StaleKeyError(
+                f"stale fingerprint grammar v{sv.group(1)} (current: v6) "
+                f"in key {key!r} — regenerate: delete the stale autotune "
+                "cache (REPRO_AUTOTUNE_CACHE) or refresh the baseline "
+                "with `python benchmarks/<bench>.py --smoke --out "
+                "benchmarks/BENCH_<name>.baseline.json`")
+        raise ValueError(f"key {key!r} does not match the v6 fingerprint "
+                         "grammar")
+    g = m.groupdict()
+    return autotune.Fingerprint(
+        n_block_rows=int(g["nbr"]), n_block_cols=int(g["nbc"]),
+        block=(int(g["h"]), int(g["w"])), nnzb=int(g["nnzb"]),
+        pad_bucket=int(g["pad"]), skew_bucket=int(g["skew"]),
+        n_bucket=int(g["n"]), reorder=g["ro"], n_shards=int(g["ns"]),
+        max_bpr=int(g["mb"]), op=g["op"])
+
+
+def sample_fingerprints():
+    """Deterministic sample of the fingerprint space: every op family x
+    reorder x shard count over a spread of structures, plus the realized
+    metas of the launch verifier's structure zoo at two N widths."""
+    from repro.kernels import autotune
+    from repro.analysis import verify_launch
+    fps = []
+    for (op, reorder, ns, block, nbr, nnzb, pad, skew, n) in \
+            itertools.product(
+                _OPS, ("identity", "jaccard"), (1, 4),
+                ((16, 16), (32, 16)), (4, 16), (8, 64),
+                (0, 35), (0, 120), (64, 512)):
+        fps.append(autotune._make_fingerprint(
+            nbr, nbr + 1, block, nnzb, pad, skew, n, reorder=reorder,
+            n_shards=ns, max_bpr=max(1, nnzb // nbr), op=op))
+    for case in verify_launch.structure_zoo():
+        metas = case.meta.shard_metas if hasattr(case.meta, "shard_metas") \
+            else (case.meta,)
+        for m in metas:
+            for op in _OPS:
+                for n in (64, 512):
+                    fps.append(autotune.fingerprint(m, n, op=op))
+    return fps
+
+
+def audit_injectivity() -> list:
+    """Prove no aliasing over the sampled space: distinct fingerprints
+    -> distinct keys, and every key round-trips losslessly."""
+    findings = []
+    seen = {}
+    for fp in sample_fingerprints():
+        key = fp.key()
+        try:
+            back = parse_key(key)
+        except ValueError as e:
+            findings.append(Finding("fingerprint-audit", "key-grammar", 0,
+                                    f"key {key!r} failed to parse: {e}"))
+            continue
+        if back != fp:
+            findings.append(Finding(
+                "fingerprint-audit", "key-grammar", 0,
+                f"key {key!r} is lossy: parsed back to {back}, not {fp}"))
+        prev = seen.setdefault(key, fp)
+        if prev != fp:
+            findings.append(Finding(
+                "fingerprint-audit", "key-grammar", 0,
+                f"ALIASING: distinct fingerprints {prev} and {fp} render "
+                f"the same key {key!r}"))
+    return findings
+
+
+def _iter_fingerprint_strings(obj, ctx=""):
+    """Yield (context, key-string) for every ``"fingerprint"`` value in a
+    nested JSON object."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            if k == "fingerprint" and isinstance(v, str):
+                yield ctx, v
+            else:
+                yield from _iter_fingerprint_strings(v, f"{ctx}/{k}")
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            yield from _iter_fingerprint_strings(v, f"{ctx}[{i}]")
+
+
+def audit_files(root: str) -> list:
+    """Validate committed artifacts under ``root``: benchmark baselines'
+    embedded fingerprints, and any autotune-cache-format JSON."""
+    from repro.kernels import autotune
+    findings = []
+    paths = sorted(glob.glob(os.path.join(root, "benchmarks",
+                                          "BENCH_*.baseline.json")))
+    cache = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if cache and os.path.exists(cache):
+        paths.append(cache)
+    for path in paths:
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            findings.append(Finding("fingerprint-audit", path, 0,
+                                    f"unreadable JSON: {e}"))
+            continue
+        for ctx, key in _iter_fingerprint_strings(data):
+            try:
+                parse_key(key)
+            except ValueError as e:
+                findings.append(Finding(
+                    "fingerprint-audit", path, 0,
+                    f"fingerprint at {ctx or '/'} invalid: {e}"))
+        if isinstance(data, dict) and isinstance(data.get("entries"), dict):
+            for key, entry in data["entries"].items():
+                try:
+                    parse_key(key)
+                except ValueError as e:
+                    findings.append(Finding("fingerprint-audit", path, 0,
+                                            f"cache key invalid: {e}"))
+                variant = (entry or {}).get("variant")
+                if variant not in autotune._REGISTRY:
+                    findings.append(Finding(
+                        "fingerprint-audit", path, 0,
+                        f"cached variant {variant!r} for {key!r} is not "
+                        "in the current registry — stale cache"))
+    return findings
+
+
+def run_audit(root: str) -> list:
+    """The CLI pass: grammar injectivity + committed-artifact validation."""
+    return audit_injectivity() + audit_files(root)

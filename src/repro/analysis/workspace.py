@@ -1,0 +1,66 @@
+"""Shared workspace / VMEM byte estimators — ONE implementation.
+
+These formulas used to live in two places: the autotuner's ``pick_bn``
+(private ``working`` expression) and ``benchmarks/bench_attention.py``
+(composed-vs-fused workspace fields that gate the benchmark diff).  The
+launch verifier needs the same numbers, so they are unified here and the
+other call sites delegate.  The formulas are DETERMINISTIC contracts —
+``BENCH_attention.baseline.json`` pins two of them bit-for-bit — so any
+change here is a baseline refresh, not a tweak.
+
+All sizes are bytes per kernel instance (per head for attention).
+
+>>> spmm_cell_bytes((16, 16), 512)
+49664
+>>> attn_fused_state_bytes((16, 16), 64)
+24576
+"""
+from __future__ import annotations
+
+# Mirrors ``autotune._VMEM_BUDGET``: conservative per-core VMEM slice
+# available to one kernel's working set (full VMEM is ~16 MiB; half is
+# left for double-buffering headroom and the compiler's own temps).
+DEFAULT_VMEM_BUDGET = 8 * 2 ** 20
+
+
+def spmm_cell_bytes(block: tuple[int, int], bn: int) -> int:
+    """Working-set bytes of one (block, bn) SpMM/SDDMM grid cell: the
+    bf16 A-block + bf16 B-panel + f32 accumulator ``pick_bn`` budgets.
+
+    >>> spmm_cell_bytes((32, 32), 256) == (32*32 + 32*256)*2 + 32*256*4
+    True
+    """
+    h, w = block
+    return (h * w + w * bn) * 2 + (h * bn) * 4
+
+
+def fits_vmem(block: tuple[int, int], bn: int,
+              budget: int = DEFAULT_VMEM_BUDGET) -> bool:
+    """True iff a (block, bn) cell double-buffers inside ``budget`` —
+    the exact feasibility predicate ``autotune.pick_bn`` uses.
+
+    >>> fits_vmem((16, 16), 512)
+    True
+    >>> fits_vmem((128, 128), 65536)
+    False
+    """
+    return spmm_cell_bytes(block, bn) * 2 <= budget
+
+
+def attn_composed_workspace_bytes(meta) -> int:
+    """Peak intermediate bytes of the composed SDDMM -> softmax -> SpMM
+    attention path per head instance: it materializes the f32 scores AND
+    probs tensors between its three launches (``2 * nnzb * h * w * 4``).
+    """
+    h, w = meta.block
+    return 2 * meta.nnzb * h * w * 4
+
+
+def attn_fused_state_bytes(block: tuple[int, int], head_dim: int) -> int:
+    """Per-block-row VMEM running state of the fused one-kernel attention
+    path: the (h, 128) max and denominator lanes plus the (h, dpad)
+    context accumulator, all f32.  O(L * d) total — independent of nnzb.
+    """
+    h, _ = block
+    dpad = max(-(-head_dim // 128), 1) * 128
+    return h * (2 * 128 + dpad) * 4

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -530,6 +531,11 @@ def resolve_backend(backend: str, bn: int, meta: SparseMeta,
             "prepare_sparse / prepare_sparse_meta have it; dims-only "
             "specs metas do not — pass sparse_linear_specs a seed, or "
             "use the model path's sparse_linear_meta)")
+    if os.environ.get("REPRO_VERIFY_LAUNCH") == "1":
+        # opt-in pre-launch contract check: meta invariants, schedule
+        # capacity, and the VMEM budget, all symbolic (repro.analysis)
+        from repro.analysis import verify_launch as _verify_launch
+        _verify_launch.assert_launch_ok(meta, backend, n=n, bn=bn, op=op)
     return backend, bn
 
 

@@ -242,11 +242,15 @@ def sparse_shard_report(cfg, n_tokens: int = 512) -> dict:
     }
     meta_in, meta_out = L.mlp_sparse_metas(
         spec, cfg.d_model, cfg.d_ff, _mlp_seed_hints(cfg))
+    from repro.analysis import verify_launch as vl
     for lname, m in (("gate_up", meta_in), ("down", meta_out)):
         rep[lname]["auto_picks"] = [
             "{}/bn{}".format(*kops.resolve_backend("auto", spec.bn, sm,
                                                    n_tokens))
             for sm in m.shard_metas]
+        # static contract re-proof: the same checks REPRO_VERIFY_LAUNCH=1
+        # would run at dispatch, surfaced in the pre-launch report
+        rep[lname]["verify"] = vl.verify_summary(m, n_tokens)
     return rep
 
 
@@ -265,9 +269,20 @@ def sparse_attention_report(cfg, seq_len: int = 512) -> dict:
     spec = getattr(cfg, "attn_sparsity", None)
     if spec is None:
         return {}
+    from repro.analysis import verify_launch as vl
+    from repro.analysis import workspace
     from repro.models import attention as A
     seq = max(seq_len, spec.block[0] * 2)   # at least two block-rows
-    return A.attention_mask_report(spec, seq, head_dim=cfg.head_dim)
+    rep = A.attention_mask_report(spec, seq, head_dim=cfg.head_dim)
+    meta = A.attention_mask_meta(spec.mask, seq, spec.block)
+    # shared estimator (repro.analysis.workspace — same numbers the
+    # attention benchmark gates on) + the static contract re-proof
+    rep["composed_workspace_bytes"] = \
+        workspace.attn_composed_workspace_bytes(meta)
+    rep["fused_state_bytes"] = \
+        workspace.attn_fused_state_bytes(spec.block, cfg.head_dim)
+    rep["verify"] = vl.verify_summary(meta, cfg.head_dim, op="attn")
+    return rep
 
 
 def main(argv=None):
