@@ -1,0 +1,194 @@
+"""Serving benchmark: continuous batching + paged block-sparse KV under
+a seeded Poisson arrival trace.
+
+Drives ``ServeEngine.step()`` explicitly: requests arrive at seeded
+Poisson inter-arrival steps (shared prompt prefixes exercise the prefix
+cache), the scheduler admits them into slots as they free up, and every
+decision is recorded.  Emits ``BENCH_serving.json`` for the CI
+regression-diff step:
+
+  python benchmarks/bench_serving.py --smoke --out BENCH_serving.json \
+      --diff benchmarks/BENCH_serving.baseline.json
+
+Gate policy (README ## Benchmarks): the DETERMINISTIC fields gate hard —
+the full scheduler trace (admit/finish events with step, slot, reuse),
+prefix-cache hit counts, the greedy token-stream checksum, per-request
+latency in STEPS (p50/p99), and the paged-KV accounting (page counts,
+pages touched per step, resident bytes).  All of these are pure
+functions of the seeded trace, so any drift is a real behavior change.
+Wall-clock tokens/sec and millisecond latencies are REPORT-ONLY:
+interpret-mode timings on shared runners are not falsifiable.  Refresh
+with ``--out benchmarks/BENCH_serving.baseline.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (os.path.join(_ROOT, "src"), _ROOT):
+    if _p not in sys.path:  # runnable without a manual PYTHONPATH prefix
+        sys.path.insert(0, _p)
+
+import time
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import transformer as T
+from repro.serve.engine import Request, ServeEngine
+
+_VOCAB = 97
+
+
+def _cfg() -> ModelConfig:
+    return ModelConfig(
+        name="bench-serving", family="dense", layout="attn_mlp",
+        n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+        d_ff=64, vocab_size=_VOCAB, dtype="float32",
+        attn_sparsity=A.AttnSparsitySpec(mask=A.banded(32), block=(16, 16),
+                                         backend="xla", interpret=True))
+
+
+def _arrival_trace(n_requests: int, max_new: int, seed: int = 0):
+    """[(arrival_step, Request)] — Poisson inter-arrivals; every third
+    request shares the pool prompt's prefix (prefix-cache traffic)."""
+    rng = np.random.default_rng(seed)
+    steps = np.cumsum(rng.poisson(2, n_requests))
+    shared = rng.integers(0, _VOCAB, size=8, dtype=np.int32)
+    out = []
+    for rid in range(n_requests):
+        if rid % 3 == 0:
+            tail = rng.integers(0, _VOCAB, size=2, dtype=np.int32)
+            prompt = np.concatenate([shared[:6], tail]).astype(np.int32)
+        else:
+            prompt = rng.integers(0, _VOCAB, size=int(rng.integers(3, 9)),
+                                  dtype=np.int32)
+        out.append((int(steps[rid]),
+                    Request(rid=rid, prompt=prompt, max_new_tokens=max_new)))
+    return out
+
+
+def run(smoke: bool = True) -> dict:
+    n_requests, max_new = (8, 4) if smoke else (32, 16)
+    cfg = _cfg()
+    params = T.init_params(cfg, seed=0)
+    engine = ServeEngine(cfg, params, n_slots=2, cache_len=64)
+    trace = _arrival_trace(n_requests, max_new)
+
+    pending = list(trace)
+    arrived_at, finished_at, tokens = {}, {}, {}
+    t0 = time.perf_counter()
+    step = 0
+    while pending or engine.scheduler.has_work():
+        while pending and pending[0][0] <= step:
+            _, req = pending.pop(0)
+            arrived_at[req.rid] = step
+            engine.enqueue(req)
+        for rid, tok in engine.step():
+            tokens.setdefault(rid, []).append(tok)
+            if len(tokens[rid]) == max_new:
+                finished_at[rid] = step
+        step += 1
+    wall_s = time.perf_counter() - t0
+
+    total_tokens = sum(len(t) for t in tokens.values())
+    latency = np.asarray(sorted(finished_at[r] - arrived_at[r]
+                                for r in finished_at))
+    checksum = int(sum((i + 1) * int(t) for toks in tokens.values()
+                       for i, t in enumerate(toks)) % 1_000_000_007)
+    kv_rep = engine.paged_kv.report()
+    result = {
+        "bench": "serving",
+        "mode": "smoke" if smoke else "full",
+        # -------- deterministic (hard-gated) --------
+        "n_requests": n_requests,
+        "max_new_tokens": max_new,
+        "total_tokens": total_tokens,
+        "token_checksum": checksum,
+        "engine_steps": step,
+        "scheduler_trace": engine.scheduler.trace,
+        "prefix_hits": engine.scheduler.prefix_hits,
+        "prefix_tokens_reused": engine.scheduler.prefix_tokens_reused,
+        "latency_steps_p50": float(np.percentile(latency, 50)),
+        "latency_steps_p99": float(np.percentile(latency, 99)),
+        "paged_kv": {
+            "resident_page_counts": kv_rep["resident_page_counts"],
+            "resident_bytes_total": kv_rep["resident_bytes_total"],
+            "offload_bytes_total": kv_rep["offload_bytes_total"],
+            "groups": [{k: g[k] for k in ("group", "paged", "n_pages",
+                                          "pages_touched_per_step",
+                                          "page_bytes")}
+                       for g in kv_rep["groups"]],
+        },
+        # -------- wall-clock (report-only) --------
+        "wall_s": round(wall_s, 3),
+        "tokens_per_sec": round(total_tokens / wall_s, 1),
+        "latency_ms_p50": round(float(np.percentile(latency, 50))
+                                * wall_s / step * 1e3, 2),
+        "latency_ms_p99": round(float(np.percentile(latency, 99))
+                                * wall_s / step * 1e3, 2),
+    }
+    print(f"serving: {n_requests} requests, {total_tokens} tokens in "
+          f"{step} steps ({result['tokens_per_sec']} tok/s report-only), "
+          f"prefix hits {result['prefix_hits']} "
+          f"({result['prefix_tokens_reused']} tokens), latency p50/p99 "
+          f"{result['latency_steps_p50']}/{result['latency_steps_p99']} "
+          "steps", file=sys.stderr)
+    return result
+
+
+# deterministic fields that must match the committed baseline exactly
+_GATED = ("n_requests", "max_new_tokens", "total_tokens", "token_checksum",
+          "engine_steps", "scheduler_trace", "prefix_hits",
+          "prefix_tokens_reused", "latency_steps_p50", "latency_steps_p99",
+          "paged_kv")
+
+
+def diff(result: dict, baseline: dict) -> int:
+    """Regression diff: every deterministic field gates hard; wall-clock
+    numbers are report-only (README policy)."""
+    failures = []
+    if result.get("mode") != baseline.get("mode"):
+        print(f"note: mode changed {baseline.get('mode')} -> "
+              f"{result.get('mode')}; skipping field diff", file=sys.stderr)
+        return 0
+    for field in _GATED:
+        if result.get(field) != baseline.get(field):
+            failures.append(f"deterministic field {field!r} changed: "
+                            f"{baseline.get(field)!r} -> "
+                            f"{result.get(field)!r}")
+    if failures:
+        print("SERVING REGRESSION:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print(f"serving diff OK: {len(_GATED)} deterministic fields stable "
+          f"(trace of {len(result['scheduler_trace'])} events)",
+          file=sys.stderr)
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--diff", default=None)
+    args = ap.parse_args()
+    result = run(smoke=args.smoke)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1, sort_keys=True)
+        print(f"wrote {args.out}", file=sys.stderr)
+    if args.diff:
+        with open(args.diff) as f:
+            baseline = json.load(f)
+        return diff(result, baseline)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,7 +5,7 @@ CI suite mode (the single entrypoint the ``benchmark-smoke`` job runs):
   python benchmarks/run.py --smoke --diff-all
 
 runs every gated benchmark (autotune, reorder, shard_scaling, sddmm,
-attention),
+attention, serving),
 writes one ``BENCH_<name>.json`` each (a single combined artifact for CI),
 diffs each against its committed ``benchmarks/BENCH_<name>.baseline.json``,
 and exits nonzero if ANY diff fails.  Refresh a baseline with the
@@ -48,6 +48,7 @@ SUITE = (
     ("bench_shard_scaling", "BENCH_shard_scaling.baseline.json"),
     ("bench_sddmm", "BENCH_sddmm.baseline.json"),
     ("bench_attention", "BENCH_attention.baseline.json"),
+    ("bench_serving", "BENCH_serving.baseline.json"),
 )
 
 # report-only paper-figure modules (never gated; run via --figures)

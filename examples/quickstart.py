@@ -1,6 +1,6 @@
 """Quickstart: the SMaT SpMM library end-to-end.
 
-CSR in -> Jaccard row reorder (transparent: handled inside prepare_sparse)
+CSR in -> Jaccard row reorder (transparent: handled inside ops.prepare)
 -> BCSR -> SpMM on the Pallas kernel (interpret mode on CPU; the same call
 targets the TPU MXU), cross-checked against dense.
 
@@ -19,15 +19,17 @@ print(f"matrix: {csr.shape}, nnz={csr.nnz}, "
       f"sparsity={1 - csr.nnz / (csr.shape[0] * csr.shape[1]):.3%}")
 
 # 2. block-densifying row permutation (the paper's preprocessing) — one
-# argument on prepare_sparse.  The permutation is stored as pytree leaves
-# (row_perm / inv_perm) and spmm returns ORIGINAL row order (C = P^T A' B),
-# so nothing downstream has to know about it.  Schemes come from the
-# repro.core.SCHEMES dispatch table: jaccard | rcm | shard_balance |
-# identity.
+# argument on ops.prepare (the unified entry point since PR 8;
+# prepare_sparse / prepare_sparse_meta remain as aliases, and
+# meta_only=True returns the static meta without device arrays).  The
+# permutation is stored as pytree leaves (row_perm / inv_perm) and spmm
+# returns ORIGINAL row order (C = P^T A' B), so nothing downstream has to
+# know about it.  Schemes come from the repro.core.SCHEMES dispatch
+# table: jaccard | rcm | shard_balance | identity.
 block = (16, 16)
 a = bcsr_lib.from_scipy(csr, block)
-arrays, meta = ops.prepare_sparse(a, dtype=jnp.float32, reorder="jaccard")
-arrays_id, meta_id = ops.prepare_sparse(a, dtype=jnp.float32)
+arrays, meta = ops.prepare(a, dtype=jnp.float32, reorder="jaccard")
+arrays_id, meta_id = ops.prepare(a, dtype=jnp.float32)
 print(f"BCSR blocks: {meta_id.nnzb} -> {meta.nnzb} "
       f"({meta_id.nnzb / meta.nnzb:.2f}x reduction from reorder="
       f"{meta.reorder!r})")
@@ -62,7 +64,7 @@ assert float(jnp.max(jnp.abs(y_auto - y_dense))) < 1e-3
 import jax
 from repro.launch import dist_spmm
 n_shards = 4
-sharr, smeta = dist_spmm.prepare_sharded(a, n_shards, dtype=jnp.float32)
+sharr, smeta = dist_spmm.prepare(a, n_shards, dtype=jnp.float32)
 mesh = (dist_spmm.make_spmm_mesh(n_shards)
         if jax.device_count() >= n_shards else None)
 y_sharded = dist_spmm.spmm_sharded(sharr, smeta, b, backend="auto",

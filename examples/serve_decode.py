@@ -1,5 +1,9 @@
-"""Serving example: batched decode with continuous slot batching on the
-MusicGen-style codebook decoder (smoke scale).
+"""Serving example: continuous batching on the MusicGen-style codebook
+decoder (smoke scale) through the PR 8 streaming API.
+
+``engine.generate(requests)`` yields ``(rid, token)`` pairs as each slot
+decodes — requests are admitted/evicted by the scheduler per step, so a
+short request finishing frees its slot for the next queued one mid-run.
 
   PYTHONPATH=src python examples/serve_decode.py
 """
@@ -19,20 +23,26 @@ def main():
 
     rng = np.random.default_rng(0)
     n_requests, new_tokens = 5, 8
-    for rid in range(n_requests):
-        prompt = rng.integers(0, cfg.vocab_size,
-                              size=(6, cfg.n_codebooks), dtype=np.int32)
-        engine.submit(Request(rid=rid, prompt=prompt,
-                              max_new_tokens=new_tokens))
+    requests = [
+        Request(rid=rid,
+                prompt=rng.integers(0, cfg.vocab_size,
+                                    size=(6, cfg.n_codebooks),
+                                    dtype=np.int32),
+                max_new_tokens=new_tokens)
+        for rid in range(n_requests)
+    ]
 
     t0 = time.time()
-    done = engine.run()
+    streamed = {}
+    for rid, token in engine.generate(requests):
+        streamed.setdefault(rid, []).append(token)
     dt = time.time() - t0
-    total = sum(len(r.out_tokens) for r in done.values())
-    print(f"served {len(done)}/{n_requests} requests "
+    total = sum(len(toks) for toks in streamed.values())
+    print(f"served {len(streamed)}/{n_requests} requests "
           f"({total} codebook-token steps) in {dt:.1f}s "
           f"with 2 decode slots")
-    assert len(done) == n_requests
+    assert len(streamed) == n_requests
+    assert all(len(t) == new_tokens for t in streamed.values())
     print("OK")
 
 

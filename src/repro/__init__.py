@@ -1,0 +1,62 @@
+"""Public facade of the ``repro`` package.
+
+The curated surface a user needs for the three workloads — sparse
+kernels (``prepare``/``prepare_sparse`` -> ``spmm``/``sddmm``), model
+integration (``SparsitySpec`` for sparse FFNs, ``AttnSparsitySpec`` for
+block-sparse attention), serving (``ServeEngine``/``Request``), and
+tuning (``Autotuner``) — importable as ``import repro`` instead of deep
+module paths.  Everything else stays addressed by its submodule.
+
+Exports resolve lazily (PEP 562 ``__getattr__``): importing ``repro``
+stays free of jax/kernel import cost until a name is touched, and the
+facade cannot create import cycles with the submodules it re-exports.
+``analysis.lint_rules`` R6 gates that every ``__all__`` name resolves.
+
+>>> import repro
+>>> repro.SparsitySpec(density=0.25, block=(16, 16)).density
+0.25
+>>> callable(repro.prepare) and callable(repro.spmm)
+True
+"""
+from __future__ import annotations
+
+import importlib
+
+__all__ = [
+    "AttnSparsitySpec",
+    "Autotuner",
+    "Request",
+    "ServeEngine",
+    "SparsitySpec",
+    "prepare",
+    "prepare_sparse",
+    "sddmm",
+    "spmm",
+]
+
+_EXPORTS = {
+    "AttnSparsitySpec": "repro.core.attention_mask",
+    "Autotuner": "repro.kernels.autotune",
+    "Request": "repro.serve.engine",
+    "ServeEngine": "repro.serve.engine",
+    "SparsitySpec": "repro.core.sparse_linear",
+    "prepare": "repro.kernels.ops",
+    "prepare_sparse": "repro.kernels.ops",
+    "sddmm": "repro.kernels.ops",
+    "spmm": "repro.kernels.ops",
+}
+
+
+def __getattr__(name: str):
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}") \
+            from None
+    value = getattr(importlib.import_module(module), name)
+    globals()[name] = value        # cache: next access skips __getattr__
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

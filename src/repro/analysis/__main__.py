@@ -21,7 +21,8 @@ from repro.analysis.report import render
 
 def _repo_root() -> str:
     import repro
-    # repro is a namespace package (no __init__.py): locate via __path__
+    # locate the installed package via __path__ (works for the facade
+    # package since PR 8 just as it did for the old namespace package)
     pkg_dir = os.path.abspath(list(repro.__path__)[0])     # .../src/repro
     return os.path.dirname(os.path.dirname(pkg_dir))
 

@@ -26,9 +26,14 @@ enforced only by convention:
   field appears in ``autotune.fingerprint``'s reads, and every
   ``Fingerprint`` field appears in ``key()``; a field missed by either
   is a cache-aliasing bug (two different structures, one autotune entry).
+* **R6 package-facade** — every name in the package facade's literal
+  ``__all__`` (``src/repro/__init__.py``) imports and resolves on the
+  live package; a stale export would break every ``import repro``
+  README snippet.
 
 ``lint_source`` runs R1-R4 on one module; ``lint_tree`` runs everything
-(R5 needs ops.py + autotune.py together) and is what the CLI gates CI on.
+(R5 needs ops.py + autotune.py together; R6 runs when the tree has a
+``repro/__init__.py``) and is what the CLI gates CI on.
 
 >>> fs = lint_source("import functools\\n"
 ...                  "@functools.lru_cache(maxsize=None)\\n"
@@ -45,7 +50,7 @@ import re
 from repro.analysis.report import Finding
 
 RULES = ("traced-numpy", "lru-cache-static", "custom-vjp-pairing",
-         "static-aux-frozen", "fingerprint-fields")
+         "static-aux-frozen", "fingerprint-fields", "package-facade")
 
 # dataclasses with these name suffixes are static aux: jit static args,
 # scan carries' hashable halves, cache keys
@@ -426,6 +431,50 @@ def check_fingerprint_fields(ops_src: str, autotune_src: str,
     return findings
 
 
+def check_package_facade(init_path: str, package: str = "repro") -> list:
+    """R6: every name in the facade's ``__all__`` imports and resolves.
+
+    The export list must be a LITERAL (``ast.literal_eval``-able) so the
+    check cannot be fooled by a computed ``__all__``; resolution runs
+    against the importable ``package`` on ``sys.path`` — for the CI gate
+    that is the same tree being linted (``pythonpath = ["src"]``)."""
+    with open(init_path) as f:
+        tree = ast.parse(f.read())
+    names = None
+    line = 0
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == "__all__":
+                    line = node.lineno
+                    try:
+                        names = list(ast.literal_eval(node.value))
+                    except ValueError:
+                        return [Finding(
+                            "package-facade", init_path, node.lineno,
+                            "__all__ is not a literal list — the facade "
+                            "check cannot verify computed exports")]
+    if names is None:
+        return [Finding("package-facade", init_path, 0,
+                        "package facade has no __all__")]
+    import importlib
+    try:
+        mod = importlib.import_module(package)
+    except Exception as e:  # noqa: BLE001 — any import failure is the bug
+        return [Finding("package-facade", init_path, line,
+                        f"`import {package}` failed: {e!r}")]
+    findings = []
+    for name in names:
+        try:
+            getattr(mod, name)
+        except Exception as e:  # noqa: BLE001
+            findings.append(Finding(
+                "package-facade", init_path, line,
+                f"__all__ name {name!r} does not resolve on "
+                f"`import {package}`: {e!r}"))
+    return findings
+
+
 # ------------------------------------------------------------- entrypoints
 def lint_source(text: str, path: str = "<source>") -> list:
     """R1-R4 on one module's source text."""
@@ -441,7 +490,8 @@ def lint_file(path: str) -> list:
 
 def lint_tree(src_root: str) -> list:
     """All rules over every ``.py`` under ``src_root`` (R5 runs when the
-    tree contains kernels/ops.py + kernels/autotune.py)."""
+    tree contains kernels/ops.py + kernels/autotune.py; R6 when it has a
+    repro/__init__.py facade)."""
     findings = []
     ops_path = autotune_path = None
     for dirpath, _, names in sorted(os.walk(src_root)):
@@ -461,4 +511,7 @@ def lint_tree(src_root: str) -> list:
             at_src = f.read()
         findings += check_fingerprint_fields(ops_src, at_src,
                                              ops_path, autotune_path)
+    init_path = os.path.join(src_root, "repro", "__init__.py")
+    if os.path.exists(init_path):           # fixture trees have no facade
+        findings += check_package_facade(init_path)
     return findings

@@ -403,6 +403,49 @@ def assert_launch_ok(meta, backend: str, *, n: int, bn: int = 512,
             f"op={op!r}, n={n}, bn={bn}:\n  - " + "\n  - ".join(errs))
 
 
+def verify_page_table(mask, seq_len: int, block,
+                      resident_pages=None) -> list:
+    """Paged-KV page-table invariants (PR 8): the table
+    (``models.attention.decode_page_table``) must cover EXACTLY the mask
+    support — every stored block-column of the mask BCSR appears exactly
+    once among the row's live slots, in ascending order (the
+    sequential-fold bitwise contract), with dead slots only in the tail
+    — and the placement (``serve.paged_kv.page_placement``) must respect
+    the device page budget.  Returns human-readable error strings."""
+    from repro.models import attention as A
+    from repro.serve import paged_kv as PK
+    pages, live, meta = A.decode_page_table(mask, seq_len, block)
+    a = A.attention_mask_bcsr(mask, seq_len, block)
+    errs = []
+    nbr, nbc = meta.n_block_rows, meta.n_block_cols
+    if pages.shape != live.shape or \
+            pages.shape != (nbr, max(meta.max_bpr, 1)):
+        errs.append(f"page-table shape {pages.shape} != "
+                    f"({nbr}, {max(meta.max_bpr, 1)})")
+        return errs
+    if pages.size and (pages.min() < 0 or pages.max() >= nbc):
+        errs.append(f"page id out of range [0, {nbc})")
+    for i in range(nbr):
+        want = np.sort(a.col_ids[a.row_ids == i]).tolist()
+        got = pages[i][live[i]].tolist()
+        if got != want:
+            errs.append(f"row {i}: live pages {got} != mask support {want}"
+                        " (coverage must be exact — no gaps, no extras)")
+        count = int(live[i].sum())
+        if live[i][:count].sum() != count:
+            errs.append(f"row {i}: dead slots not a tail suffix")
+    pspec = PK.PagePlacementSpec(resident_pages=resident_pages)
+    resident = PK.page_placement(mask, seq_len, block, pspec)
+    budget = nbc if resident_pages is None else \
+        max(0, min(nbc, int(resident_pages)))
+    if resident.size != nbc:
+        errs.append(f"placement size {resident.size} != n_pages {nbc}")
+    if int(resident.sum()) > budget:
+        errs.append(f"resident-budget overflow: {int(resident.sum())} "
+                    f"pages resident > budget {budget}")
+    return errs
+
+
 def verify_summary(meta, n: int, op: str = "spmm") -> dict:
     """Compact dict for ``launch.dryrun`` reports: meta invariants (and,
     for sharded metas, per-shard checks) re-proved at report time."""
@@ -515,4 +558,17 @@ def run_verify(vmem_budget: int = workspace.DEFAULT_VMEM_BUDGET,
                     emit(case, [e for e in verify_launch(
                         m, backend, n=n, op=op, vmem_budget=vmem_budget)
                         if e])
+
+    # paged-KV page tables: exact mask-support coverage + placement
+    # budgets, per mask family, with and without an offload budget
+    from repro.core.attention_mask import (banded, blockwise_causal,
+                                           local_global)
+    for mname, spec, seq in (("mask_banded", banded(32), 128),
+                             ("mask_local_global", local_global(32, 16), 128),
+                             ("mask_causal", blockwise_causal(), 64)):
+        for budget in (None, 2):
+            findings.extend(
+                Finding("launch-verify", f"paged:{mname}", 0, m)
+                for m in verify_page_table(spec, seq, (16, 16),
+                                           resident_pages=budget))
     return findings

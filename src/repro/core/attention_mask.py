@@ -110,10 +110,20 @@ class AttnSparsitySpec:
     structure through ``launch.dist_spmm`` for the context product
     (shard_map under a compatible ambient mesh from
     ``dist_spmm.use_spmm_mesh``, identical in-process math otherwise) —
-    sharded specs always run composed."""
+    sharded specs always run composed.
+
+    ``paged_decode`` controls the serving decode path (PR 8): ``"auto"``
+    gathers KV through the mask-BCSR page table whenever that touches
+    strictly fewer pages than the cache holds (banded / local_global
+    masks), ``"force"`` takes the paged path whenever it is structurally
+    possible (cache_len divisible by the mask block width), ``"off"``
+    keeps the dense-bias decode.  All three are bitwise-identical to the
+    full-table run of the same machinery — the paged gather only skips
+    pages whose softmax contribution is exactly zero."""
     mask: AttnMaskSpec = dataclasses.field(default_factory=blockwise_causal)
     block: Tuple[int, int] = (16, 16)
     backend: str = "auto"   # pallas | row_loop | xla | dense | auto | fused
     bn: int = 512
     interpret: bool = False
     shards: int = 0                 # >0: row-shard the score structure
+    paged_decode: str = "auto"      # auto | force | off (serving decode)

@@ -246,6 +246,35 @@ def prepare_sparse_meta(a: bcsr_lib.BCSR, *, reorder: str = "identity",
         tau=tau, max_candidates=max_candidates, n_shards=n_shards)[1]
 
 
+def prepare(a: bcsr_lib.BCSR, dtype=jnp.bfloat16, *,
+            meta_only: bool = False, reorder: str = "identity",
+            reorder_granularity: str = "element", tau: float = 0.7,
+            max_candidates: Optional[int] = None, n_shards: int = 8):
+    """Unified entry point for the local prepare twins (PR 8).
+
+    ``meta_only=False`` (default) delegates to :func:`prepare_sparse` and
+    returns ``(SparseArrays, SparseMeta)``; ``meta_only=True`` delegates
+    to :func:`prepare_sparse_meta` and returns the ``SparseMeta`` alone
+    (``dtype`` is ignored — meta is dtype-free by construction).  The
+    twins stay as documented aliases; this is the name the package facade
+    (``repro.prepare``) and the quickstart use.
+
+    >>> import numpy as np, jax.numpy as jnp
+    >>> from repro.core import bcsr as bcsr_lib
+    >>> from repro.kernels import ops
+    >>> dense = np.kron(np.eye(4, dtype=np.float32), np.ones((8, 8)))
+    >>> a = bcsr_lib.from_dense(dense, (8, 8))
+    >>> arrays, meta = ops.prepare(a, dtype=jnp.float32)
+    >>> ops.prepare(a, meta_only=True) == meta
+    True
+    """
+    kw = dict(reorder=reorder, reorder_granularity=reorder_granularity,
+              tau=tau, max_candidates=max_candidates, n_shards=n_shards)
+    if meta_only:
+        return prepare_sparse_meta(a, **kw)
+    return prepare_sparse(a, dtype, **kw)
+
+
 # ------------------------------------------------------------ forward pieces
 def _clamp_bn(bn: int, n: int) -> int:
     """Effective N-tile width: the configured bn, capped at N rounded up to

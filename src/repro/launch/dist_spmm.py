@@ -384,6 +384,36 @@ def prepare_sharded_meta(a: bcsr_lib.BCSR, n_shards: int, *,
         nnzb_per_shard=nnzb_per_shard)[1]
 
 
+def prepare(a: bcsr_lib.BCSR, n_shards: int, *, meta_only: bool = False,
+            col_shards: int = 1, dtype=jnp.bfloat16,
+            reorder: str = "identity", tau: float = 0.7,
+            max_candidates: Optional[int] = None,
+            rows_per_shard: Optional[int] = None,
+            nnzb_per_shard: Optional[int] = None):
+    """Unified entry point for the sharded prepare twins (PR 8).
+
+    ``meta_only=False`` (default) delegates to :func:`prepare_sharded`
+    and returns ``(ShardedArrays, ShardedMeta)``; ``meta_only=True``
+    delegates to :func:`prepare_sharded_meta` and returns the
+    ``ShardedMeta`` alone (``dtype`` is ignored — meta is dtype-free by
+    construction).  The twins stay as documented aliases; this mirrors
+    ``kernels.ops.prepare`` for the distributed op family.
+
+    >>> from repro.core import bcsr as bcsr_lib
+    >>> from repro.launch import dist_spmm
+    >>> a = bcsr_lib.random_bcsr_exact(7, (320, 256), (16, 16), nnzb=80)
+    >>> _, smeta = dist_spmm.prepare(a, 4)
+    >>> dist_spmm.prepare(a, 4, meta_only=True) == smeta
+    True
+    """
+    kw = dict(col_shards=col_shards, reorder=reorder, tau=tau,
+              max_candidates=max_candidates, rows_per_shard=rows_per_shard,
+              nnzb_per_shard=nnzb_per_shard)
+    if meta_only:
+        return prepare_sharded_meta(a, n_shards, **kw)
+    return prepare_sharded(a, n_shards, dtype=dtype, **kw)
+
+
 # ---------------------------------------------------------------- execution
 def _resolve_shard_choices(smeta: ShardedMeta, n_local: int, backend: str,
                            bn: int) -> Tuple[Tuple[str, int], ...]:

@@ -285,6 +285,33 @@ def sparse_attention_report(cfg, seq_len: int = 512) -> dict:
     return rep
 
 
+def paged_kv_report(cfg, cache_len: int = 512, n_slots: int = 4) -> dict:
+    """Paged block-sparse KV accounting for serving (PR 8) — empty when
+    the arch has no ``attn_sparsity`` or no k/v attention rings.
+
+    Per layer group: page count and bytes, pages touched per decode step
+    (the mask meta's ``max_bpr`` — the page table IS the mask BCSR),
+    device-resident vs host-offloaded bytes under the analytic placement
+    policy, and the cost-model step-read estimates.  Derived entirely
+    from static metas, like the other sparse reports; also round-trips
+    the materialized page tables through ``sharding.cache_shardings`` so
+    the page-table leaf rules stay exercised."""
+    spec = getattr(cfg, "attn_sparsity", None)
+    if spec is None or cfg.layout not in ("attn_mlp", "gemma_pair"):
+        return {}
+    from repro.serve.paged_kv import PagedKVCache  # local: layering
+    paged = PagedKVCache(cfg, cache_len, n_slots)
+    rep = paged.report()
+    leaves = paged.table_leaves()
+    if leaves:
+        mesh = mesh_lib.make_mesh((1, 1), ("data", "model"))
+        shardings = sh.cache_shardings(mesh, leaves, cfg)
+        rep["table_leaf_specs"] = {
+            g: {k: str(s.spec) for k, s in d.items()}
+            for g, d in shardings.items()}
+    return rep
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -339,6 +366,19 @@ def main(argv=None):
                   f"spmm={attn_rep['spmm_pick']}")
             records.append({"arch": cfg.name, "status": "sparse_attention",
                             "sparse_attention": attn_rep})
+        kv_rep = paged_kv_report(cfg)
+        if kv_rep:
+            for g in kv_rep["groups"]:
+                extra = ("" if not g.get("paged") else
+                         f", {g['pages_touched_per_step']}/{g['n_pages']} "
+                         "pages/step")
+                print(f"[dryrun] {cfg.name} paged KV [{g['group']}]: "
+                      f"{g.get('n_pages', 0)} pages x "
+                      f"{g.get('page_bytes', 0)} B, resident "
+                      f"{g.get('resident_bytes', 0)} B over "
+                      f"{g['n_layers']} layers (paged={g['paged']}{extra})")
+            records.append({"arch": cfg.name, "status": "paged_kv",
+                            "paged_kv": kv_rep})
         for s in shapes:
             cell = SHAPES[s]
             if args.batch or args.seq:

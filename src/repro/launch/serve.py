@@ -1,5 +1,5 @@
-"""Serving launcher CLI: loads a (smoke-scale) model and runs batched
-decode over a synthetic request stream, reporting tokens/s.
+"""Serving launcher CLI: loads a (smoke-scale) model and runs continuous
+batched decode over a synthetic request stream, reporting tokens/s.
 
   PYTHONPATH=src python -m repro.launch.serve --arch musicgen-medium:smoke \
       --requests 8 --new-tokens 16
@@ -33,6 +33,7 @@ def main(argv=None):
                          cache_len=args.cache_len)
 
     rng = np.random.default_rng(0)
+    requests = []
     for rid in range(args.requests):
         if cfg.input_mode == "codebooks":
             prompt = rng.integers(0, cfg.vocab_size,
@@ -41,20 +42,30 @@ def main(argv=None):
         else:
             prompt = rng.integers(0, cfg.vocab_size, size=args.prompt_len,
                                   dtype=np.int32)
-        engine.submit(Request(rid=rid, prompt=prompt,
-                              max_new_tokens=args.new_tokens,
-                              temperature=args.temperature))
+        requests.append(Request(rid=rid, prompt=prompt,
+                                max_new_tokens=args.new_tokens,
+                                temperature=args.temperature))
 
     t0 = time.time()
-    done = engine.run()
+    streamed = {}
+    for rid, token in engine.generate(requests):
+        streamed.setdefault(rid, []).append(token)
     dt = time.time() - t0
-    total_new = sum(len(r.out_tokens) for r in done.values())
-    print(f"[serve] {len(done)}/{args.requests} requests, "
+    total_new = sum(len(toks) for toks in streamed.values())
+    print(f"[serve] {len(streamed)}/{args.requests} requests, "
           f"{total_new} new tokens in {dt:.2f}s "
           f"({total_new / dt:.1f} tok/s)")
-    for rid in sorted(done)[:3]:
-        toks = done[rid].out_tokens[:8]
-        print(f"  rid={rid} first-tokens={toks}")
+    print(f"[serve] scheduler: {engine.scheduler.step_idx} engine steps, "
+          f"{engine.scheduler.prefix_hits} prefix-cache hits "
+          f"({engine.scheduler.prefix_tokens_reused} tokens reused)")
+    if engine.paged_kv is not None:
+        rep = engine.paged_kv.report()
+        print(f"[serve] paged KV: resident "
+              f"{rep['resident_bytes_total']} B, offloaded "
+              f"{rep['offload_bytes_total']} B over "
+              f"{len(rep['groups'])} layer group(s)")
+    for rid in sorted(streamed)[:3]:
+        print(f"  rid={rid} first-tokens={streamed[rid][:8]}")
     return 0
 
 

@@ -263,6 +263,13 @@ def cache_shardings(mesh, cache_specs_tree, cfg: ModelConfig,
         elif name == "state":
             spec = [None] * (nd - 4) + [None if seq_shard else bd,
                                         None, None, None]
+        elif name in ("pages", "page_live"):
+            # paged-KV page tables (serve.paged_kv.PagedKVCache
+            # .table_leaves): [nbr, max_bpr] index/liveness constants of
+            # the mask BCSR.  Every device gathers through the WHOLE
+            # table (the decode row index is traced), and the tables are
+            # a few KiB — replicate, never shard.
+            spec = [None] * nd
         else:
             spec = [None] * nd
         return NamedSharding(mesh, fit_spec(mesh, P(*spec), shape))

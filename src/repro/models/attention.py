@@ -70,6 +70,44 @@ def decode_mask_bias(spec: AttnMaskSpec, q_pos: jnp.ndarray,
     return jnp.where(mask_allowed(spec, q_pos, k_pos), 0.0, NEG_INF)
 
 
+@functools.lru_cache(maxsize=None)
+def decode_page_table(spec: AttnMaskSpec, seq_len: int,
+                      block: Tuple[int, int]):
+    """Serving page table of the mask — literally the mask BCSR reshaped
+    to a ``[n_block_rows, max_bpr]`` slot grid (the page-table-as-BCSR
+    contract of ``serve.paged_kv``): row ``i`` lists, in ascending key
+    order, the ids of every KV page (block-column of width ``block[1]``)
+    that queries in block-row ``i`` can ever touch under ``spec``;
+    ``live`` marks real slots (rows with fewer than ``max_bpr`` mask
+    blocks pad with dead slots that gather page 0 and are masked out).
+
+    Host numpy constants, memoized like the other mask pipelines —
+    trace-safe to close over in a jitted decode step.  Returns
+    ``(pages, live, meta)``.
+
+    >>> from repro.models import attention as A
+    >>> pages, live, meta = A.decode_page_table(A.banded(32), 64, (16, 16))
+    >>> pages.shape == live.shape == (4, meta.max_bpr)
+    True
+    >>> pages[3][live[3]].tolist()      # block-row 3 touches pages 1..3
+    [1, 2, 3]
+    """
+    a = attention_mask_bcsr(spec, seq_len, block)
+    meta = attention_mask_meta(spec, seq_len, block)
+    nbr = meta.n_block_rows
+    slots = max(meta.max_bpr, 1)
+    pages = np.zeros((nbr, slots), np.int32)
+    live = np.zeros((nbr, slots), bool)
+    counts = np.bincount(a.row_ids, minlength=nbr)
+    rowptr = np.concatenate([[0], np.cumsum(counts)])
+    slot = np.arange(a.row_ids.shape[0]) - rowptr[a.row_ids]
+    pages[a.row_ids, slot] = a.col_ids          # ascending within each row
+    live[a.row_ids, slot] = True
+    pages.setflags(write=False)
+    live.setflags(write=False)
+    return pages, live, meta
+
+
 # ======================================================== mask BCSR pipeline
 @functools.lru_cache(maxsize=None)
 def attention_mask_bcsr(spec: AttnMaskSpec, seq_len: int,

@@ -125,6 +125,90 @@ def _sparse_mask(cfg, window):
     return mask
 
 
+def _decode_pages(cfg, window, cache_len):
+    """Static paged-decode resolution for one attention layer: the mask
+    page table (host constants) when the paged KV path applies, else None
+    (dense-bias decode).  ``AttnSparsitySpec.paged_decode`` gates it:
+    "auto" requires a strict page saving (``max_bpr < n_pages``), "force"
+    only structural feasibility, "off" disables.  Trace-safe — depends on
+    static config only."""
+    sparse = getattr(cfg, "attn_sparsity", None)
+    if sparse is None:
+        return None
+    mode = getattr(sparse, "paged_decode", "auto")
+    if mode == "off":
+        return None
+    w = sparse.block[1]
+    if cache_len % w != 0:          # pages must tile the KV ring exactly
+        return None
+    from repro.models import attention as A
+    pages, live, meta = A.decode_page_table(
+        _sparse_mask(cfg, window), cache_len, sparse.block)
+    if meta.max_bpr <= 0:
+        return None
+    if mode != "force" and meta.max_bpr >= cache_len // w:
+        return None                 # no page saving: keep the dense bias
+    return pages, live
+
+
+def _paged_decode(cfg, q, kc, vc, pos, window, cap, scale, *,
+                  pages, live):
+    """One-token decode attention reading KV through the mask page table
+    (``attention.decode_page_table``) instead of biasing the dense cache.
+
+    Only the ``max_bpr`` pages of block-row ``pos // block_h`` are
+    gathered; softmax combines them as a SEQUENTIAL per-page fold in
+    ascending key order (exact running max, then denominator and context
+    accumulated page by page).  A page absent from the table contributes
+    exactly 0.0 to the denominator and context and never attains the max,
+    and inserting exact zeros into a sequential add chain is a bitwise
+    no-op — so this path is bit-for-bit equal in f32 to the same fold
+    over the FULL page table (the dense-bias reference arm pinned per
+    mask family in ``tests/test_serving.py``).
+
+    Positions are taken as ``page * w + offset``: the paged path assumes
+    the ring has not wrapped (``pos < cache_len``), which the serving
+    scheduler enforces at admission (``len(prompt) + max_new_tokens <=
+    cache_len``)."""
+    from repro.models import attention as A
+    spec = _sparse_mask(cfg, window)
+    B, _, H, dh = q.shape
+    Sc, KV = kc.shape[1], kc.shape[2]
+    h, w = cfg.attn_sparsity.block
+    n_pages = Sc // w
+    nbr = pages.shape[0]
+    row = jnp.clip(pos // h, 0, nbr - 1)
+    cols = jnp.asarray(pages)[row]                        # [P]
+    alive = jnp.asarray(live)[row]                        # [P]
+    P = int(cols.shape[0])
+    kp = kc.reshape(B, n_pages, w, KV, dh)[:, cols]       # [B,P,w,KV,dh]
+    vp = vc.reshape(B, n_pages, w, KV, dh)[:, cols]
+    k_pos = (cols[:, None] * w +
+             jnp.arange(w, dtype=jnp.int32)[None]).reshape(-1)   # [P*w]
+    qpos = jnp.reshape(pos, (1,))
+    bias = (_mask_bias(qpos, k_pos, window) +
+            A.decode_mask_bias(spec, qpos, k_pos))[0].reshape(P, w)
+    bias = jnp.where(alive[:, None], bias, NEG_INF)
+    rep = H // KV
+    qg = q.reshape(B, KV, rep, dh).astype(jnp.float32)    # L == 1 squeezed
+    scores = jnp.einsum("bgrd,bpwgd->bgrpw", qg,
+                        kp.astype(jnp.float32)) * scale
+    scores = softcap(scores, cap)
+    biased = scores + bias[None, None, None]              # [B,g,r,P,w]
+    m = jnp.max(biased, axis=(3, 4))                      # exact any order
+    z = jnp.exp(biased - m[..., None, None])
+    page_sum = z.sum(axis=4)                              # [B,g,r,P]
+    partial = jnp.einsum("bgrpw,bpwgd->bgrpd", z,
+                         vp.astype(jnp.float32))          # [B,g,r,P,dh]
+    denom = jnp.zeros(m.shape, jnp.float32)
+    ctx = jnp.zeros(m.shape + (dh,), jnp.float32)
+    for p in range(P):      # static P: unrolled sequential add chains
+        denom = denom + page_sum[..., p]
+        ctx = ctx + partial[..., p, :]
+    ctx = ctx / denom[..., None]
+    return ctx.reshape(B, 1, H, dh)
+
+
 def _sparse_attention(cfg, q, k, v, window, cap, scale):
     """Full-sequence attention through ``models.attention``: SDDMM scores
     on the static BCSR mask, masked block softmax, SpMM context.  Replaces
@@ -194,16 +278,24 @@ def attention(cfg, p, x, *, window=None, cache=None, pos=None,
         vc = jax.lax.dynamic_update_slice(
             cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
         new_cache = {"k": kc, "v": vc}
-        j = jnp.arange(Sc, dtype=jnp.int32)
-        k_pos = pos - ((pos - j) % Sc)       # ring-buffer slot positions
-        bias = _mask_bias(jnp.reshape(pos, (1,)), k_pos, window)  # [1, Sc]
-        if sparse is not None:
-            # the decode twin of the block-sparse score mask
-            from repro.models import attention as A
-            bias = bias + A.decode_mask_bias(
-                _sparse_mask(cfg, window), jnp.reshape(pos, (1,)), k_pos)
-        bias = jnp.broadcast_to(bias[None], (B, 1, Sc))
-        ctx = _sdpa(q, kc, vc, bias, cap, scale)
+        table = _decode_pages(cfg, window, Sc)
+        if table is not None:
+            # paged KV: gather only the mask row's pages (serve.paged_kv)
+            ctx = _paged_decode(cfg, q, kc, vc, pos, window, cap, scale,
+                                pages=table[0], live=table[1])
+        else:
+            j = jnp.arange(Sc, dtype=jnp.int32)
+            k_pos = pos - ((pos - j) % Sc)   # ring-buffer slot positions
+            bias = _mask_bias(jnp.reshape(pos, (1,)), k_pos,
+                              window)        # [1, Sc]
+            if sparse is not None:
+                # the decode twin of the block-sparse score mask
+                from repro.models import attention as A
+                bias = bias + A.decode_mask_bias(
+                    _sparse_mask(cfg, window), jnp.reshape(pos, (1,)),
+                    k_pos)
+            bias = jnp.broadcast_to(bias[None], (B, 1, Sc))
+            ctx = _sdpa(q, kc, vc, bias, cap, scale)
 
     y = _dense(ctx.reshape(B, L, h * dh).astype(x.dtype), p["wo"])
     return y, new_cache

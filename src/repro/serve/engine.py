@@ -1,15 +1,38 @@
-"""Batched serving engine: prefill + decode with slot-based continuous
-batching.
+"""Continuous-batching serving engine.
 
-A fixed decode batch of ``n_slots`` sequences; finished/empty slots are
-refilled from the request queue and the KV cache slices for that slot are
-reset (cache layout puts batch on a leading-after-stack axis, so per-slot
-reset is a masked write).  Sampling: greedy or temperature.
+PR 8 redesign: the engine is now a thin executor around two policy
+objects —
+
+* ``serve.scheduler.Scheduler`` makes every admit/feed/evict decision on
+  the host (FIFO admission into free slots, prefill/decode interleave by
+  position grouping, prefix-cache reuse, deterministic trace events);
+* ``serve.paged_kv.PagedKVCache`` accounts for the paged block-sparse KV
+  view (the decode gather itself rides inside the jitted step via
+  ``models.layers._paged_decode`` whenever ``cfg.attn_sparsity`` allows).
+
+Public surface::
+
+    engine = ServeEngine(cfg, params, n_slots=4, cache_len=256)
+    for rid, token in engine.generate(requests):   # streaming results
+        ...
+    events = engine.step()       # or explicit stepping (trace-driven
+                                 # benchmarks): [(rid, token)] per step
+
+The legacy fixed-slot surface (``submit()`` + ``run()``) remains as thin
+deprecation shims and will be removed after the next release; both now
+emit ``DeprecationWarning`` and delegate to the scheduler, producing
+token-for-token identical streams (pinned in
+``tests/test_serving.py``).
+
+Every decode step is the SAME jitted ``_masked_step`` regardless of how
+many slots are active or at which positions — slot masks keep shapes
+static, so the scheduler never causes a retrace.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import warnings
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +40,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
+from repro.serve.scheduler import Scheduler, SchedulerConfig
 
 # decode-cache batch-axis position by leaf name (same layout conventions as
 # launch.sharding.cache_shardings):
@@ -25,6 +49,12 @@ from repro.models import transformer as T
 _CACHE_BATCH_AXIS = {"k": -4, "v": -4, "ckv": -3, "krope": -3,
                      "conv": -3, "state": -4}
 
+# leaves indexed by position along their second-to-batch axis — the ones a
+# cross-slot prefix copy is exact for.  ssd conv/state summarize history
+# (the state after the LAST token, not per position), so prefix reuse is
+# disabled for layouts that carry them.
+_POSITION_INDEXED = ("k", "v", "ckv", "krope")
+
 
 def _merge_cache(old, new, slot_mask):
     """Keep ``new`` cache entries only for slots in ``slot_mask`` [B] bool.
@@ -32,8 +62,8 @@ def _merge_cache(old, new, slot_mask):
     A batched ``decode_step`` writes KV at the step's ``pos`` for EVERY
     batch row — including pad tokens of slots that are mid-sequence at a
     different position.  Without this merge, each per-group decode in
-    ``ServeEngine.step`` (and each prompt token in ``_admit``) overwrites
-    the other slots' already-written cache entries with pad-token KV."""
+    ``ServeEngine.step`` overwrites the other slots' already-written
+    cache entries with pad-token KV."""
     def merge(path, o, n):
         name = getattr(path[-1], "key", getattr(path[-1], "name", None))
         ax = _CACHE_BATCH_AXIS.get(name)
@@ -49,6 +79,22 @@ def _merge_cache(old, new, slot_mask):
     return jax.tree_util.tree_map_with_path(merge, old, new)
 
 
+def _copy_slot(cache, src: int, dst: int):
+    """Copy slot ``src``'s cache rows over slot ``dst`` on every leaf —
+    the prefix-cache transfer.  Rows are batch-independent, so the copied
+    prefix KV is bitwise identical to recomputing it; positions past the
+    shared prefix are overwritten by the admitted request's own prefill
+    or masked causally (``k_pos <= pos``)."""
+    def cp(path, leaf):
+        name = getattr(path[-1], "key", getattr(path[-1], "name", None))
+        ax = _CACHE_BATCH_AXIS[name] % leaf.ndim
+        row = jnp.take(leaf, jnp.asarray([src]), axis=ax)
+        starts = [0] * leaf.ndim
+        starts[ax] = dst
+        return jax.lax.dynamic_update_slice(leaf, row, tuple(starts))
+    return jax.tree_util.tree_map_with_path(cp, cache)
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -61,7 +107,8 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
                  cache_len: int = 256, mesh=None, seed: int = 0,
-                 spmm_mesh=None):
+                 spmm_mesh=None, prefix_cache: bool = True,
+                 placement=None):
         """``spmm_mesh``: optional dedicated mesh for the partitioned
         sparse-FFN path (``SparsitySpec(shards=...)``).  When set, decode
         traces run under ``dist_spmm.use_spmm_mesh`` so every sparse layer
@@ -75,10 +122,16 @@ class ServeEngine:
         autotune cache across processes with ``REPRO_AUTOTUNE_CACHE``.
 
         With ``cfg.attn_sparsity`` set (block-sparse attention), decode
-        steps apply the SAME static mask spec as a positional bias, so
-        served tokens match the block-sparse train/prefill math —
-        ``tests/test_sddmm_attention.py`` pins engine-level equality
-        against a dense-attention engine for the causal mask."""
+        applies the SAME static mask spec the train/prefill path scores —
+        through the paged-KV gather (``AttnSparsitySpec.paged_decode``,
+        bitwise-equal to the dense-bias fold) or as a positional bias —
+        so served tokens match the block-sparse train math;
+        ``self.paged_kv`` carries the placement accounting
+        (``serve.paged_kv.PagedKVCache``).
+
+        ``prefix_cache`` enables cross-slot KV reuse for shared prompt
+        prefixes; it is forced off for layouts whose cache leaves are not
+        position-indexed (ssd/zamba conv+state summarize history)."""
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -106,108 +159,110 @@ class ServeEngine:
 
         self._decode = _decode
         self.cache = T.init_cache(cfg, n_slots, cache_len)
-        self.slot_req: List[Optional[Request]] = [None] * n_slots
-        self.slot_pos = np.zeros(n_slots, np.int32)
-        self.queue: List[Request] = []
+        leaf_names = {getattr(p[-1], "key", getattr(p[-1], "name", None))
+                      for p, _ in jax.tree_util.tree_flatten_with_path(
+                          self.cache)[0]}
+        prefix_ok = leaf_names <= set(_POSITION_INDEXED)
+        self.scheduler = Scheduler(SchedulerConfig(
+            n_slots=n_slots, cache_len=cache_len,
+            prefix_cache=bool(prefix_cache) and prefix_ok))
+        self.paged_kv = None
+        if getattr(cfg, "attn_sparsity", None) is not None and \
+                cfg.layout in ("attn_mlp", "gemma_pair"):
+            from repro.serve.paged_kv import PagedKVCache
+            self.paged_kv = PagedKVCache(cfg, cache_len, n_slots,
+                                         placement=placement)
         self.done: Dict[int, Request] = {}
 
     # ---------------------------------------------------------------- admin
-    def submit(self, req: Request):
+    def enqueue(self, req: Request) -> None:
+        """Queue a request; it is admitted to a slot by the next step."""
         req.out_tokens = []
-        self.queue.append(req)
+        self.scheduler.enqueue(req)
 
-    def _free_slots(self):
-        return [i for i, r in enumerate(self.slot_req) if r is None]
+    def submit(self, req: Request) -> None:
+        """Deprecated: use ``enqueue`` (or just ``generate``).  Will be
+        removed after the continuous-batching API stabilizes."""
+        warnings.warn("ServeEngine.submit() is deprecated; use "
+                      "enqueue()/generate()", DeprecationWarning,
+                      stacklevel=2)
+        self.enqueue(req)
 
-    def _admit(self):
-        """Prefill-by-decode: feed all prompt tokens EXCEPT the last through
-        decode steps for the admitted slot (simple and correct; a production
-        path would use the batched prefill kernel per slot).  The last
-        prompt token is left for the first ``step()``, which decodes it at
-        its true position and samples the first output token from its
-        logits — prefilling it here would write its KV twice (pos L-1 and
-        L) and condition the continuation on a duplicated token."""
-        for slot in self._free_slots():
-            if not self.queue:
-                break
-            req = self.queue.pop(0)
-            self.slot_req[slot] = req
-            self.slot_pos[slot] = 0
-            # teacher-force the prompt through this slot; only this slot's
-            # cache rows may be touched (other slots can be mid-decode)
-            mask = np.zeros(self.n_slots, bool)
-            mask[slot] = True
-            mask = jnp.asarray(mask)
-            for t in range(len(req.prompt) - 1):
-                tok = self._slot_tokens(slot, req.prompt[t])
-                _, self.cache = self._decode(
-                    self.params, self.cache, tok,
-                    jnp.asarray(int(self.slot_pos[slot]), jnp.int32), mask)
-                self.slot_pos[slot] += 1
-
-    def _slot_tokens(self, slot: int, value) -> jnp.ndarray:
-        """Batch token vector with ``value`` in ``slot`` and pad elsewhere.
-        Pad rows produce garbage logits (ignored) and their cache writes are
-        discarded by the slot mask in ``_decode``."""
+    def _slot_tokens(self, entries) -> jnp.ndarray:
+        """Batch token vector with each entry's token in its slot and pad
+        elsewhere.  Pad rows produce garbage logits (ignored) and their
+        cache writes are discarded by the slot mask in ``_decode``."""
         if self.cfg.input_mode == "codebooks":
             arr = np.zeros((self.n_slots, self.cfg.n_codebooks), np.int32)
         else:
             arr = np.zeros((self.n_slots,), np.int32)
-        arr[slot] = value
+        for slot, token, _ in entries:
+            arr[slot] = token
         return jnp.asarray(arr)
 
     # ----------------------------------------------------------------- step
-    def step(self):
-        """One decode step for every active slot (batched)."""
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
-        if not active:
-            return
-        # batched greedy decode: slots sharing a position step together; when
-        # positions diverge, each group decodes with a slot mask so only the
-        # group's cache rows are written (pad rows must never clobber other
-        # groups' entries at this pos)
-        pos_groups: Dict[int, list] = {}
-        for s in active:
-            pos_groups.setdefault(int(self.slot_pos[s]), []).append(s)
-        for pos, slots in pos_groups.items():
-            if self.cfg.input_mode == "codebooks":
-                toks = np.zeros((self.n_slots, self.cfg.n_codebooks),
-                                np.int32)
-            else:
-                toks = np.zeros((self.n_slots,), np.int32)
+    def step(self) -> List[Tuple[int, object]]:
+        """Admit pending requests, run one decode step for every active
+        slot (one batched dispatch per position group), and return the
+        tokens sampled this step as ``[(rid, token)]``."""
+        for adm in self.scheduler.admit():
+            if adm["reuse"] > 0 and adm["src"] != adm["slot"]:
+                self.cache = _copy_slot(self.cache, adm["src"], adm["slot"])
+        produced: List[Tuple[int, object]] = []
+        for pos, entries in self.scheduler.plan():
+            toks = self._slot_tokens(entries)
             mask = np.zeros(self.n_slots, bool)
-            for s in slots:
-                last = (self.slot_req[s].out_tokens[-1]
-                        if self.slot_req[s].out_tokens
-                        else self.slot_req[s].prompt[-1])
-                toks[s] = last
-                mask[s] = True
+            for slot, _, _ in entries:
+                mask[slot] = True
             logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(toks),
+                self.params, self.cache, toks,
                 jnp.asarray(pos, jnp.int32), jnp.asarray(mask))
-            logits = np.asarray(logits, np.float32)
-            for s in slots:
-                req = self.slot_req[s]
-                lg = logits[s]
+            need = [e for e in entries if e[2]]
+            if need:
+                logits = np.asarray(logits, np.float32)
+            for slot, token, _ in entries:
+                self.scheduler.advance(slot, token)
+            for slot, _, _ in need:
+                req = self.scheduler.slots[slot].req
+                lg = logits[slot]
                 if req.temperature > 0:
                     self.key, sub = jax.random.split(self.key)
                     tok = np.asarray(jax.random.categorical(
                         sub, jnp.asarray(lg) / req.temperature, axis=-1))
                 else:
                     tok = lg.argmax(axis=-1)
-                req.out_tokens.append(
-                    int(tok) if np.ndim(tok) == 0 else tok.astype(np.int32))
-                self.slot_pos[s] += 1
-                if len(req.out_tokens) >= req.max_new_tokens:
+                tok = int(tok) if np.ndim(tok) == 0 else tok.astype(np.int32)
+                if self.scheduler.record_output(slot, tok):
                     self.done[req.rid] = req
-                    self.slot_req[s] = None
+                produced.append((req.rid, tok))
+        self.scheduler.step_idx += 1
+        return produced
+
+    # ------------------------------------------------------------- generate
+    def generate(self, requests, max_steps: int = 100_000
+                 ) -> Iterator[Tuple[int, object]]:
+        """Stream ``(request_id, token)`` pairs as decoding produces them.
+
+        Enqueues ``requests`` and steps the engine until every queued
+        request completes — later requests are admitted continuously as
+        slots free up, so the iterator interleaves results across
+        requests in deterministic (position-group, slot) order."""
+        for req in requests:
+            self.enqueue(req)
+        steps = 0
+        while self.scheduler.has_work() and steps < max_steps:
+            yield from self.step()
+            steps += 1
 
     # ------------------------------------------------------------------ run
     def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
+        """Deprecated: drain the queue and return ``{rid: Request}`` —
+        use ``generate`` (streaming) or explicit ``step()`` instead.
+        Will be removed after the continuous-batching API stabilizes."""
+        warnings.warn("ServeEngine.run() is deprecated; use "
+                      "generate()/step()", DeprecationWarning, stacklevel=2)
         steps = 0
-        while (self.queue or any(r is not None for r in self.slot_req)) \
-                and steps < max_steps:
-            self._admit()
+        while self.scheduler.has_work() and steps < max_steps:
             self.step()
             steps += 1
         return self.done

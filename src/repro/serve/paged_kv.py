@@ -1,0 +1,206 @@
+"""Paged block-sparse KV: the page table IS the mask BCSR.
+
+The serving decode path never needs the whole KV ring: a static
+attention mask (``AttnMaskSpec``) tells us, per query block-row, exactly
+which key blocks can ever score — and that row of the memoized mask BCSR
+(``models.attention.decode_page_table``) doubles as the page table of a
+paged KV cache with page width = the mask block width.  The gather
+itself lives in ``models.layers._paged_decode`` (gated by
+``AttnSparsitySpec.paged_decode``, bitwise-equal to the full-table run);
+this module owns what sits ABOVE the math:
+
+* the **placement policy** — which pages stay device-resident vs
+  host-offloaded, decided analytically from page demand (how many mask
+  block-rows reference each page = the BCSR column counts) under a
+  device page budget;
+* the **cost model** — expected per-decode-step read time under HBM vs
+  host-link bandwidths, ``(1/nbr) * sum_p demand[p] * page_bytes /
+  bw(p)`` (each step lands in one block-row; a page is read iff its
+  column appears in that row);
+* the **accounting reports** consumed by ``launch.dryrun`` (pages and
+  resident bytes per layer group) and ``benchmarks/bench_serving.py``
+  (deterministic CI-gated fields).
+
+Everything here is host-side and deterministic in the config — this is
+an *analytic* placement layer (the repo runs on CPU; no real offload is
+performed), in the same spirit as the dryrun's VMEM feasibility math.
+
+>>> from repro.models import attention as A
+>>> page_demand(A.banded(32), 64, (16, 16)).tolist()
+[3, 3, 2, 1]
+>>> spec = PagePlacementSpec(resident_pages=2)
+>>> page_placement(A.banded(32), 64, (16, 16), spec).tolist()
+[True, True, False, False]
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PagePlacementSpec:
+    """Static placement policy (hashable — feeds lru_cached placement).
+
+    ``resident_pages`` is the per-layer-group device budget in pages;
+    ``None`` keeps everything device-resident.  Bandwidths are the
+    analytic cost-model constants (defaults: one HBM2E stack vs a
+    PCIe4-ish host link)."""
+    policy: str = "greedy"              # greedy | all_device
+    resident_pages: Optional[int] = None
+    hbm_gbps: float = 819.0
+    host_gbps: float = 32.0
+
+
+@functools.lru_cache(maxsize=None)
+def page_demand(mask, seq_len: int, block: Tuple[int, int]) -> np.ndarray:
+    """Demand of each KV page = number of mask block-rows referencing it
+    (the column counts of the mask BCSR).  Memoized host constant."""
+    from repro.models import attention as A
+    a = A.attention_mask_bcsr(mask, seq_len, block)
+    meta = A.attention_mask_meta(mask, seq_len, block)
+    d = np.bincount(a.col_ids, minlength=meta.n_block_cols).astype(np.int64)
+    d.setflags(write=False)
+    return d
+
+
+@functools.lru_cache(maxsize=None)
+def page_placement(mask, seq_len: int, block: Tuple[int, int],
+                   pspec: PagePlacementSpec) -> np.ndarray:
+    """[n_pages] bool — True where the page is device-resident.  Greedy:
+    most-demanded pages first under the budget (ties -> lowest page id,
+    ``np.argsort(kind="stable")`` — deterministic)."""
+    demand = page_demand(mask, seq_len, block)
+    n_pages = int(demand.size)
+    if pspec.policy == "all_device" or pspec.resident_pages is None:
+        budget = n_pages
+    elif pspec.policy == "greedy":
+        budget = max(0, min(n_pages, int(pspec.resident_pages)))
+    else:
+        raise ValueError(f"unknown placement policy {pspec.policy!r}")
+    order = np.argsort(-demand, kind="stable")
+    resident = np.zeros(n_pages, bool)
+    resident[order[:budget]] = True
+    resident.setflags(write=False)
+    return resident
+
+
+class PagedKVCache:
+    """Analytic paged view over a ``ServeEngine``'s KV rings.
+
+    Holds NO arrays — the engine's ring buffers stay the storage and the
+    page tables are the memoized mask-BCSR constants.  This object binds
+    a model config + serving shape to a placement spec and renders the
+    per-layer-group accounting: page counts, pages touched per decode
+    step (= the mask meta's ``max_bpr``), resident/offloaded bytes, and
+    the cost-model step-read estimates (paged vs dense ring read).
+
+    Layer groups follow the transformer layouts that own k/v rings:
+    ``attn_mlp`` is one group (all layers share the config mask +
+    sliding window); ``gemma_pair`` splits into local (window-capped,
+    possibly smaller ring) and global halves.
+    """
+
+    def __init__(self, cfg, cache_len: int, n_slots: int,
+                 placement: Optional[PagePlacementSpec] = None):
+        if getattr(cfg, "attn_sparsity", None) is None:
+            raise ValueError("PagedKVCache requires cfg.attn_sparsity")
+        if cfg.layout not in ("attn_mlp", "gemma_pair"):
+            raise ValueError(
+                f"layout {cfg.layout!r} has no k/v attention rings to page")
+        self.cfg = cfg
+        self.cache_len = int(cache_len)
+        self.n_slots = int(n_slots)
+        self.placement = placement or PagePlacementSpec()
+
+    def _groups(self):
+        """[(name, window, n_layers)] — layer groups sharing one mask."""
+        cfg = self.cfg
+        if cfg.layout == "attn_mlp":
+            return [("attn", cfg.sliding_window, cfg.n_layers)]
+        half = cfg.n_layers // 2
+        return [("local", cfg.sliding_window, half), ("global", None, half)]
+
+    def group_report(self, name: str, window, n_layers: int) -> dict:
+        """Deterministic accounting row for one layer group."""
+        from repro.models import layers as L
+        cfg = self.cfg
+        sc = min(self.cache_len, window) if window else self.cache_len
+        mask = L._sparse_mask(cfg, window)
+        h, w = cfg.attn_sparsity.block
+        table = L._decode_pages(cfg, window, sc)
+        row = {"group": name, "n_layers": n_layers, "cache_len": sc,
+               "mask": dataclasses.asdict(mask),
+               "paged": table is not None}
+        if sc % w != 0:
+            return row              # dense-bias fallback: no page grid
+        n_pages = sc // w
+        demand = page_demand(mask, sc, (h, w))
+        resident = page_placement(mask, sc, (h, w), self.placement)
+        kv_bytes = np.dtype(cfg.dtype).itemsize * cfg.n_kv_heads * \
+            cfg.head_dim * 2                      # k + v, per position
+        page_bytes = int(w * kv_bytes * self.n_slots)
+        nbr = -(-sc // h)
+        bw = np.where(resident, self.placement.hbm_gbps,
+                      self.placement.host_gbps) * 1e9
+        est_us = float(np.sum(demand * page_bytes / bw) / nbr * 1e6)
+        dense_us = n_pages * page_bytes / (self.placement.hbm_gbps
+                                           * 1e9) * 1e6
+        meta = None
+        if table is not None:
+            from repro.models import attention as A
+            meta = A.decode_page_table(mask, sc, (h, w))[2]
+        row.update({
+            "n_pages": n_pages,
+            "page_bytes": page_bytes,
+            "pages_touched_per_step": int(meta.max_bpr) if meta else n_pages,
+            "resident_pages": int(resident.sum()),
+            "resident_bytes": int(resident.sum()) * page_bytes * n_layers,
+            "offload_bytes": int((~resident).sum()) * page_bytes * n_layers,
+            "est_step_read_us": round(est_us * n_layers, 4),
+            "est_step_read_us_dense": round(dense_us * n_layers, 4),
+        })
+        return row
+
+    def table_leaves(self) -> dict:
+        """Page tables of every layer group as device arrays,
+        ``{group: {"pages": [nbr, max_bpr] i32, "page_live": bool}}`` —
+        the leaves ``launch.sharding.cache_shardings`` replicates by
+        name.  The jitted decode path closes over the same tables as
+        host constants; this materialized form exists for explicit
+        placement under a mesh (dryrun exercises the rule)."""
+        import jax.numpy as jnp
+        from repro.models import attention as A
+        from repro.models import layers as L
+        out = {}
+        for name, window, _ in self._groups():
+            sc = min(self.cache_len, window) if window else self.cache_len
+            w = self.cfg.attn_sparsity.block[1]
+            if sc % w != 0:
+                continue
+            mask = L._sparse_mask(self.cfg, window)
+            pages, live, _ = A.decode_page_table(
+                mask, sc, self.cfg.attn_sparsity.block)
+            out[name] = {"pages": jnp.asarray(pages),
+                         "page_live": jnp.asarray(live)}
+        return out
+
+    def report(self) -> dict:
+        """Per-group rows + totals — the ``launch.dryrun`` serving record
+        and the hard-gated page fields of ``BENCH_serving.json``."""
+        rows = [self.group_report(*g) for g in self._groups()]
+        return {
+            "cache_len": self.cache_len,
+            "n_slots": self.n_slots,
+            "placement": dataclasses.asdict(self.placement),
+            "groups": rows,
+            "resident_bytes_total": sum(r.get("resident_bytes", 0)
+                                        for r in rows),
+            "offload_bytes_total": sum(r.get("offload_bytes", 0)
+                                       for r in rows),
+            "resident_page_counts": [r.get("resident_pages", 0)
+                                     for r in rows],
+        }

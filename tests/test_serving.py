@@ -1,0 +1,290 @@
+"""PR 8 serving pins: the continuous-batching engine must be
+token-for-token identical to fixed-slot decoding, the paged block-sparse
+KV decode must be BITWISE equal to the dense-bias decode in f32, and
+every scheduler/placement decision must be deterministic in the request
+trace alone (same trace -> same admits, tokens, page tables — locally
+and under the 8-device forced-host mesh used by CI's test-multidevice).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.paged_kv import PagePlacementSpec
+
+jnp_f32 = jnp.float32
+
+
+def _tiny_cfg(**over) -> ModelConfig:
+    kw = dict(name="serving-test", family="dense", layout="attn_mlp",
+              n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+              d_ff=64, vocab_size=97, dtype="float32")
+    kw.update(over)
+    return ModelConfig(**kw)
+
+
+def _sparse_cfg(mask=None, **attn_over) -> ModelConfig:
+    spec = A.AttnSparsitySpec(mask=mask or A.banded(32), block=(16, 16),
+                              backend="xla", interpret=True, **attn_over)
+    return _tiny_cfg(attn_sparsity=spec)
+
+
+def _stream(cfg, params, requests, **engine_kw):
+    eng = ServeEngine(cfg, params, **engine_kw)
+    out = {}
+    for rid, tok in eng.generate([dataclasses.replace(r) for r in requests]):
+        out.setdefault(rid, []).append(tok)
+    return eng, out
+
+
+def _requests(n, rng, vocab, lens=(7, 2, 5, 3, 6), max_new=4):
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab, size=lens[i % len(lens)],
+                                        dtype=np.int32),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+# ------------------------------------------------- fixed-slot equivalence
+def test_continuous_batching_matches_fixed_slot_reference():
+    """With greedy sampling, the continuous engine (2 slots, 5 queued
+    requests -> admissions/evictions mid-run) must emit for every request
+    EXACTLY the tokens a fixed-slot decode_step loop produces for that
+    request alone — slot rows are causally isolated, so continuous
+    batching is a pure scheduling change."""
+    cfg = _tiny_cfg()
+    params = T.init_params(cfg, seed=0)
+    reqs = _requests(5, np.random.default_rng(0), cfg.vocab_size)
+
+    def fixed_slot_oracle(prompt, max_new):
+        cache = T.init_cache(cfg, 1, 32)
+        logits, pos = None, 0
+        for t in prompt:
+            logits, cache = T.decode_step(
+                cfg, params, cache, jnp.asarray([t], jnp.int32),
+                jnp.asarray(pos, jnp.int32))
+            pos += 1
+        out = []
+        for _ in range(max_new):
+            tok = int(np.asarray(logits, np.float32)[0].argmax(-1))
+            out.append(tok)
+            logits, cache = T.decode_step(
+                cfg, params, cache, jnp.asarray([tok], jnp.int32),
+                jnp.asarray(pos, jnp.int32))
+            pos += 1
+        return out
+
+    _, got = _stream(cfg, params, reqs, n_slots=2, cache_len=32)
+    assert sorted(got) == [r.rid for r in reqs]
+    for r in reqs:
+        want = fixed_slot_oracle(r.prompt, r.max_new_tokens)
+        assert got[r.rid] == want, (
+            f"rid {r.rid}: continuous {got[r.rid]} != fixed-slot {want}")
+
+
+def test_generate_stream_matches_run_shim_and_warns():
+    """The deprecated submit()/run() surface must produce token-for-token
+    the same results as generate(), and both shims must warn."""
+    cfg = _tiny_cfg()
+    params = T.init_params(cfg, seed=0)
+    reqs = _requests(4, np.random.default_rng(1), cfg.vocab_size)
+
+    _, streamed = _stream(cfg, params, reqs, n_slots=2, cache_len=32)
+
+    eng = ServeEngine(cfg, params, n_slots=2, cache_len=32)
+    with pytest.warns(DeprecationWarning):
+        for r in reqs:
+            eng.submit(dataclasses.replace(r))
+    with pytest.warns(DeprecationWarning):
+        done = eng.run()
+    assert {rid: req.out_tokens for rid, req in done.items()} == streamed
+
+
+def test_enqueue_rejects_cache_overflow():
+    cfg = _tiny_cfg()
+    params = T.init_params(cfg, seed=0)
+    eng = ServeEngine(cfg, params, n_slots=1, cache_len=8)
+    with pytest.raises(ValueError, match="exceeds cache_len"):
+        eng.enqueue(Request(rid=0, prompt=np.arange(6, dtype=np.int32),
+                            max_new_tokens=3))
+
+
+# ------------------------------------------------------- paged KV decode
+@pytest.mark.parametrize("mask", [A.banded(32), A.local_global(32, 16),
+                                  A.blockwise_causal()],
+                         ids=["banded", "local_global", "causal"])
+def test_paged_decode_bitwise_equals_full_table(mask):
+    """The paged gather + sequential per-page softmax fold must be
+    BITWISE equal to running the same fold over the FULL page table
+    (= the dense-bias decode): skipped pages contribute exact zeros, and
+    inserting exact zeros into a sequential add chain is a no-op."""
+    cfg = _sparse_cfg(mask=mask, paged_decode="force")
+    Sc, (h, w) = 64, cfg.attn_sparsity.block
+    n_pages = Sc // w
+    B, KV, dh = 3, cfg.n_kv_heads, cfg.head_dim
+    H = cfg.n_heads
+    pages, live, _ = A.decode_page_table(mask, Sc, (h, w))
+    full_pages = np.arange(n_pages, dtype=np.int32)[None]
+    full_live = np.ones((1, n_pages), bool)
+
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((B, 1, H, dh)), jnp_f32)
+    kc = jnp.asarray(rng.standard_normal((B, Sc, KV, dh)), jnp_f32)
+    vc = jnp.asarray(rng.standard_normal((B, Sc, KV, dh)), jnp_f32)
+    scale = dh ** -0.5
+    for pos in (0, 7, 17, 40, 63):
+        got = L._paged_decode(cfg, q, kc, vc, jnp.asarray(pos, jnp.int32),
+                              None, None, scale, pages=pages, live=live)
+        ref = L._paged_decode(cfg, q, kc, vc, jnp.asarray(pos, jnp.int32),
+                              None, None, scale, pages=full_pages,
+                              live=full_live)
+        assert np.array_equal(np.asarray(got), np.asarray(ref)), \
+            f"paged decode diverged from dense-bias reference at pos={pos}"
+
+
+@pytest.mark.parametrize("mask", [A.banded(32), A.local_global(32, 16)],
+                         ids=["banded", "local_global"])
+def test_engine_paged_force_matches_off(mask):
+    """End-to-end: an engine decoding through the page table must emit
+    the SAME greedy tokens as one with the paged path disabled (f32
+    throughout -> the bitwise unit pin makes argmax identical)."""
+    params = T.init_params(_sparse_cfg(mask=mask), seed=0)
+    reqs = _requests(3, np.random.default_rng(4), 97, lens=(5, 3, 4))
+    streams = {}
+    for mode in ("force", "off"):
+        cfg = _sparse_cfg(mask=mask, paged_decode=mode)
+        eng, streams[mode] = _stream(cfg, params, reqs,
+                                     n_slots=2, cache_len=64)
+        if mode == "force":
+            assert eng.paged_kv is not None
+            assert all(g["paged"] for g in eng.paged_kv.report()["groups"])
+    assert streams["force"] == streams["off"]
+
+
+def test_engine_auto_paged_gates_on_page_saving():
+    """"auto" engages paging only when the mask saves pages: banded(32)
+    at cache_len 64 touches 3 of 4 pages -> paged; blockwise_causal
+    touches all pages -> dense-bias decode."""
+    assert L._decode_pages(_sparse_cfg(mask=A.banded(32)), None,
+                           64) is not None
+    assert L._decode_pages(_sparse_cfg(mask=A.blockwise_causal()), None,
+                           64) is None
+
+
+# --------------------------------------------------------- prefix cache
+def test_prefix_cache_reuse_is_exact_and_counted():
+    """Shared-prefix requests decoded with the prefix cache must emit the
+    same tokens as with it disabled (copied KV rows are bitwise equal to
+    recomputed ones), and the scheduler must record the hits."""
+    cfg = _tiny_cfg()
+    params = T.init_params(cfg, seed=0)
+    base = np.asarray([11, 23, 5, 42, 7, 19], np.int32)
+    reqs = [Request(rid=0, prompt=base, max_new_tokens=3),
+            Request(rid=1, prompt=np.concatenate([base[:4], [88]])
+                    .astype(np.int32), max_new_tokens=3),
+            Request(rid=2, prompt=base.copy(), max_new_tokens=3)]
+
+    eng_on, with_cache = _stream(cfg, params, reqs, n_slots=1, cache_len=32)
+    eng_off, without = _stream(cfg, params, reqs, n_slots=1, cache_len=32,
+                               prefix_cache=False)
+    assert with_cache == without
+    assert eng_on.scheduler.prefix_hits >= 2
+    assert eng_on.scheduler.prefix_tokens_reused >= 8
+    assert eng_off.scheduler.prefix_hits == 0
+    # fewer decode dispatches with reuse: the engine skipped the reused
+    # prefill positions entirely
+    assert eng_on.scheduler.step_idx < eng_off.scheduler.step_idx
+
+
+# -------------------------------------------------------- determinism
+def test_serving_trace_determinism():
+    """Two runs over the same seeded trace must agree on every admit/evict
+    decision, every sampled token (greedy AND temperature: the engine key
+    is seeded), and the full paged-KV report."""
+    reqs = _requests(5, np.random.default_rng(5), 97)
+    reqs[2].temperature = 0.7
+    runs = []
+    for _ in range(2):
+        cfg = _sparse_cfg()
+        params = T.init_params(cfg, seed=0)
+        eng, toks = _stream(cfg, params, reqs, n_slots=2, cache_len=64)
+        runs.append({"tokens": toks, "trace": eng.scheduler.trace,
+                     "report": eng.paged_kv.report(),
+                     "tables": jax.tree_util.tree_map(
+                         lambda x: np.asarray(x).tolist(),
+                         eng.paged_kv.table_leaves())})
+    assert runs[0] == runs[1]
+
+
+@pytest.mark.skipif(jax.device_count() < 4,
+                    reason="needs >= 4 devices "
+                           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+def test_serving_trace_matches_under_mesh():
+    """mesh=None vs a real 4-way spmm mesh (8 forced host devices in CI):
+    identical token streams, scheduler traces, and page tables — the
+    sharded FFN path is the same math and scheduling is host-side."""
+    from repro.launch import dist_spmm
+    from repro.core.sparse_linear import SparsitySpec
+    ffn = SparsitySpec(density=0.5, block=(16, 16), backend="xla",
+                       shards=4, interpret=True)
+    reqs = _requests(4, np.random.default_rng(6), 97, lens=(5, 3, 6, 2))
+    runs = {}
+    for name, mesh in (("local", None),
+                       ("mesh", dist_spmm.make_spmm_mesh(4))):
+        cfg = _sparse_cfg()
+        cfg = dataclasses.replace(cfg, d_ff=64, ffn_sparsity=ffn)
+        params = T.init_params(cfg, seed=0)
+        eng, toks = _stream(cfg, params, reqs, n_slots=2, cache_len=64,
+                            spmm_mesh=mesh)
+        runs[name] = {"tokens": toks, "trace": eng.scheduler.trace,
+                      "tables": jax.tree_util.tree_map(
+                          lambda x: np.asarray(x).tolist(),
+                          eng.paged_kv.table_leaves())}
+    assert runs["local"] == runs["mesh"]
+
+
+# ----------------------------------------------- placement + invariants
+def test_placement_budget_and_cost_model():
+    cfg = _sparse_cfg()
+    from repro.serve.paged_kv import PagedKVCache
+    kv = PagedKVCache(cfg, 64, 2,
+                      placement=PagePlacementSpec(resident_pages=2))
+    rep = kv.report()
+    (row,) = rep["groups"]
+    assert row["paged"] and row["n_pages"] == 4
+    assert row["resident_pages"] == 2
+    assert rep["resident_bytes_total"] + rep["offload_bytes_total"] == \
+        row["page_bytes"] * row["n_pages"] * row["n_layers"]
+    # offloading must cost more than all-device in the model
+    all_dev = PagedKVCache(cfg, 64, 2).group_report("attn", None,
+                                                    cfg.n_layers)
+    assert row["est_step_read_us"] > all_dev["est_step_read_us"]
+
+
+def test_verify_page_table_invariants():
+    from repro.analysis.verify_launch import verify_page_table
+    for mask, sl in ((A.banded(32), 128), (A.local_global(32, 16), 128),
+                     (A.blockwise_causal(), 64)):
+        assert verify_page_table(mask, sl, (16, 16)) == []
+        assert verify_page_table(mask, sl, (16, 16), resident_pages=2) == []
+
+
+def test_verify_page_table_detects_budget_overflow(monkeypatch):
+    from repro.analysis import verify_launch
+    from repro.serve import paged_kv
+
+    def too_many(mask, sl, block, pspec):
+        return np.ones(int(paged_kv.page_demand(mask, sl, block).size), bool)
+
+    monkeypatch.setattr(paged_kv, "page_placement", too_many)
+    msgs = verify_launch.verify_page_table(A.banded(32), 128, (16, 16),
+                                           resident_pages=1)
+    assert any("resident-budget overflow" in m for m in msgs)
