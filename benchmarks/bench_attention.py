@@ -2,7 +2,7 @@
 composed SDDMM -> softmax -> SpMM triple vs the dense-masked oracle.
 
 For each attention-mask family, times the three implementations and
-reports the v6 ``op=attn`` fingerprint, the autotune pick, and the
+reports the v7 ``op=attn`` fingerprint, the autotune pick, and the
 DETERMINISTIC peak-workspace estimate: the composed path materializes the
 scores AND probs tensors (``2 * nnzb * h * w * 4`` bytes per head
 instance), while the fused kernel keeps only per-block-row running state
@@ -13,7 +13,7 @@ instance), while the fused kernel keeps only per-block-row running state
       --diff benchmarks/BENCH_attention.baseline.json
 
 Gate policy (README ## Benchmarks): the DETERMINISTIC fields gate hard —
-case set, mask nnzb / max_bpr, the v6 ``op=attn`` fingerprint key, pick
+case set, mask nnzb / max_bpr, the v7 ``op=attn`` fingerprint key, pick
 membership in the attn variant family, the workspace-bytes estimates, and
 the two correctness bits (``bitwise_equal``: fused == composed bit-for-bit
 in f32; ``matches_oracle``: both within 1e-4 of the dense-masked
@@ -149,8 +149,8 @@ def diff(result: dict, baseline: dict) -> int:
     for name in sorted(set(want) - set(got)):
         failures.append(f"case disappeared vs baseline: {name}")
     for name, c in got.items():
-        if not c["fingerprint"].startswith("v6|op=attn|"):
-            failures.append(f"{name}: fingerprint not in the v6 op=attn "
+        if not c["fingerprint"].startswith("v7|op=attn|"):
+            failures.append(f"{name}: fingerprint not in the v7 op=attn "
                             f"key space: {c['fingerprint']}")
         if c["attn_pick"] not in attn_family:
             failures.append(f"{name}: pick {c['attn_pick']!r} is not an "

@@ -12,7 +12,7 @@ regression-diff step:
 
 Gate policy (README ## Benchmarks): the DETERMINISTIC fields gate hard —
 case set, mask nnzb / max_bpr (the mask builders are pure functions), the
-v6 ``op=sddmm`` fingerprint key, and pick membership in the SDDMM variant
+v7 ``op=sddmm`` fingerprint key, and pick membership in the SDDMM variant
 family.  Wall-clock numbers (speedup_vs_default, timings) are REPORT-ONLY:
 interpret-mode timings on shared runners are not falsifiable.  Refresh
 with ``--out benchmarks/BENCH_sddmm.baseline.json``.
@@ -124,8 +124,8 @@ def diff(result: dict, baseline: dict) -> int:
     for name in sorted(set(want) - set(got)):
         failures.append(f"case disappeared vs baseline: {name}")
     for name, c in got.items():
-        if not c["fingerprint"].startswith("v6|op=sddmm|"):
-            failures.append(f"{name}: fingerprint not in the v6 op=sddmm "
+        if not c["fingerprint"].startswith("v7|op=sddmm|"):
+            failures.append(f"{name}: fingerprint not in the v7 op=sddmm "
                             f"key space: {c['fingerprint']}")
         if c["choice"]["variant"] not in sddmm_family:
             failures.append(f"{name}: pick {c['choice']['variant']!r} is "

@@ -8,6 +8,14 @@ For each structure case and shard count in {1, 2, 4, 8} it reports:
   * wall-clock of the sharded SpMM (in-process local mode — the math the
     shard_map runs per device) vs the unsharded reference.
 
+An ``overlap`` section sweeps the communication-overlap pipeline: per
+structure it resolves the autotuned shard count (``dist_spmm
+.resolve_n_shards`` — the same v7-keyed decision ``shards="auto"``
+makes), runs the chunked dispatch at n_chunks in {1, 2, 4}, and records
+whether every chunked panel is BIT-identical to the unchunked one
+(uint32 view compare), the chunk schedules, and report-only timings of
+auto-S chunked vs fixed-S unchunked.
+
 Emits machine-readable JSON consumed by the CI diff step:
 
   python benchmarks/bench_shard_scaling.py --smoke \
@@ -18,8 +26,11 @@ Gate policy (matching the autotune baseline's "report, never compare"
 stance on absolute times): nnzb-BALANCE gates are hard — they are
 deterministic functions of the seeded structures — while timings are
 reported only.  ``--diff`` checks (a) no baseline case disappeared,
-(b) the LPT imbalance never exceeds the contiguous split's, and (c) the
-imbalance stays within 10% of the committed baseline's.  Refresh with
+(b) the LPT imbalance never exceeds the contiguous split's, (c) the
+imbalance stays within 10% of the committed baseline's, and (d) the
+overlap invariants: every chunked run bit-identical, the autotuned
+shard counts unchanged vs baseline AND structure-dependent (the skewed
+structure must pick S>1, the uniform one S=1).  Refresh with
 ``--out benchmarks/BENCH_shard_scaling.baseline.json``.
 """
 from __future__ import annotations
@@ -46,6 +57,7 @@ from repro.kernels import ops
 from repro.launch import dist_spmm
 
 SHARD_COUNTS = (1, 2, 4, 8)
+CHUNK_COUNTS = (1, 2, 4)
 MAX_IMBALANCE_VS_BASE = 1.10
 
 
@@ -74,8 +86,64 @@ def _time(fn, b, iters=3):
     return float(np.min(ts))
 
 
-def run(smoke: bool = True) -> dict:
+def _overlap_sweep(smoke: bool, n: int) -> list:
+    """Per structure: autotuned shard count (the ``shards="auto"``
+    decision), chunked-vs-unchunked bit-identity at each pipeline depth,
+    schedules, and report-only timings (auto-S chunked, fixed-S=4)."""
+    out = []
+    for name, a in _cases(smoke):
+        _, meta = ops.prepare_sparse(a, dtype=jnp.float32)
+        b = jnp.asarray(np.random.default_rng(0).standard_normal(
+            (meta.shape[1], n)).astype(np.float32))
+        choice = dist_spmm.resolve_n_shards(a, n=n, max_shards=8, n_chunks=2)
+        S = max(choice.n_shards, 1)
+        sharr, smeta = dist_spmm.prepare_sharded(a, S, dtype=jnp.float32)
+        base = None
+        chunk_rows = []
+        for k in CHUNK_COUNTS:
+            fn = jax.jit(lambda bb, _k=k: dist_spmm.spmm_sharded(
+                sharr, smeta, bb, backend="xla", n_chunks=_k))
+            got = np.asarray(jax.block_until_ready(fn(b)))
+            if base is None:
+                base = got
+            chunk_rows.append({
+                "n_chunks": k,
+                "schedule": [list(c) for c in
+                             dist_spmm.chunk_schedule(n, k)],
+                # the overlap contract: chunked == unchunked to the bit
+                "bitwise_equal": bool(np.array_equal(
+                    base.view(np.uint32), got.view(np.uint32))),
+                "us": round(_time(fn, b) * 1e6, 1),
+            })
+        f_arr, f_meta = dist_spmm.prepare_sharded(a, 4, dtype=jnp.float32)
+        fixed_s = _time(jax.jit(lambda bb: dist_spmm.spmm_sharded(
+            f_arr, f_meta, bb, backend="xla")), b)
+        row = {
+            "name": name,
+            "auto_shards": S,
+            "auto_source": choice.source,
+            "predicted_us": choice.predicted_us,
+            "chunks": chunk_rows,
+            "fixed_s4_us": round(fixed_s * 1e6, 1),
+        }
+        out.append(row)
+        bits = "".join("=" if c["bitwise_equal"] else "X"
+                       for c in chunk_rows)
+        print(f"{name:>20}: auto S={S} ({choice.source}), chunk bits "
+              f"[{bits}], auto-chunked "
+              f"{[c['us'] for c in chunk_rows]}us, fixed-S4 "
+              f"{row['fixed_s4_us']}us", file=sys.stderr)
+    return out
+
+
+def run(smoke: bool = True, overlap_only: bool = False) -> dict:
     n = 64 if smoke else 256
+    if overlap_only:
+        return {
+            "bench": "shard_scaling",
+            "mode": "smoke" if smoke else "full",
+            "overlap": _overlap_sweep(smoke, n),
+        }
     rows = []
     for name, a in _cases(smoke):
         arrays, meta = ops.prepare_sparse(a, dtype=jnp.float32)
@@ -113,14 +181,15 @@ def run(smoke: bool = True) -> dict:
         "mode": "smoke" if smoke else "full",
         "shard_counts": list(SHARD_COUNTS),
         "cases": rows,
+        "overlap": _overlap_sweep(smoke, n),
     }
 
 
 def diff(result: dict, baseline: dict) -> int:
     """Regression diff; returns a process exit code.  Balance gates are
     hard (deterministic); timings are informational."""
-    got = {c["name"]: c for c in result["cases"]}
-    want = {c["name"]: c for c in baseline["cases"]}
+    got = {c["name"]: c for c in result.get("cases", ())}
+    want = {c["name"]: c for c in baseline.get("cases", ())}
     failures = []
     for name in sorted(set(want) - set(got)):
         failures.append(f"case disappeared vs baseline: {name}")
@@ -137,6 +206,40 @@ def diff(result: dict, baseline: dict) -> int:
             failures.append(
                 f"{name}: imbalance {c['imbalance']}x regressed vs "
                 f"committed baseline {base['imbalance']}x")
+
+    # overlap invariants: bit-identity and the autotuned shard counts are
+    # deterministic functions of (structure, dims) — hard gates, like the
+    # balance fields (timings above stay report-only)
+    ov_got = {c["name"]: c for c in result.get("overlap", ())}
+    ov_want = {c["name"]: c for c in baseline.get("overlap", ())}
+    for name in sorted(set(ov_want) - set(ov_got)):
+        failures.append(f"overlap case disappeared vs baseline: {name}")
+    for name, c in ov_got.items():
+        for ch in c["chunks"]:
+            if not ch["bitwise_equal"]:
+                failures.append(
+                    f"{name}: n_chunks={ch['n_chunks']} output is NOT "
+                    "bit-identical to the unchunked panel")
+        base = ov_want.get(name)
+        if base and c["auto_shards"] != base["auto_shards"]:
+            failures.append(
+                f"{name}: autotuned shard count {c['auto_shards']} != "
+                f"baseline {base['auto_shards']} — the shards=\"auto\" "
+                "decision drifted")
+        if base and [ch["schedule"] for ch in c["chunks"]] != \
+                [ch["schedule"] for ch in base["chunks"]]:
+            failures.append(f"{name}: chunk schedules drifted vs baseline")
+    # structure dependence (acceptance invariant): the skewed structure
+    # must shard, the uniform one must not
+    if "power_law_skew" in ov_got and \
+            ov_got["power_law_skew"]["auto_shards"] <= 1:
+        failures.append("power_law_skew: expected autotuned S>1 for the "
+                        "skewed structure, got S=1")
+    if "uniform_p15" in ov_got and \
+            ov_got["uniform_p15"]["auto_shards"] != 1:
+        failures.append(
+            f"uniform_p15: expected autotuned S=1 for the uniform "
+            f"structure, got S={ov_got['uniform_p15']['auto_shards']}")
     if failures:
         print("SHARD-SCALING REGRESSION:", file=sys.stderr)
         for f in failures:
@@ -154,9 +257,13 @@ def main() -> int:
                     help="where to write the results JSON")
     ap.add_argument("--diff", default=None, metavar="BASELINE",
                     help="after running, diff results against this baseline")
+    ap.add_argument("--overlap", action="store_true",
+                    help="run only the communication-overlap sweep "
+                         "(auto-S + chunked bit-identity), skipping the "
+                         "shard-count scaling section")
     args = ap.parse_args()
 
-    result = run(args.smoke)
+    result = run(args.smoke, overlap_only=args.overlap)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=1, sort_keys=True)
     print(f"wrote {args.out}", file=sys.stderr)

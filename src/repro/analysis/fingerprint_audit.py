@@ -1,4 +1,4 @@
-"""v6 fingerprint-grammar audit: parse, prove injectivity, validate files.
+"""v7 fingerprint-grammar audit: parse, prove injectivity, validate files.
 
 The autotune cache key is a flat string (``Fingerprint.key()``); nothing
 at runtime ever parses it back, so a grammar bug — a field dropped from
@@ -6,9 +6,9 @@ the template, two fields that can collide textually, a stale cache from
 an older grammar — would surface as silently-aliased picks, not an
 error.  This pass closes that hole three ways:
 
-* ``parse_key`` — a strict grammar for the v6 key; round-tripping
+* ``parse_key`` — a strict grammar for the v7 key; round-tripping
   ``parse_key(fp.key()) == fp`` proves the rendering is lossless.
-  Keys from the retired v1-v5 grammars raise ``StaleKeyError`` with the
+  Keys from the retired v1-v6 grammars raise ``StaleKeyError`` with the
   refresh command instead of a generic parse failure.
 * ``audit_injectivity`` — over ops x reorders x shard counts x a sampled
   structure space (plus every structure-zoo meta), distinct fingerprints
@@ -17,7 +17,8 @@ error.  This pass closes that hole three ways:
   ``BENCH_*.baseline.json`` fingerprints, any autotune cache JSON with
   the ``{"version": 1, "entries": {key: {variant, ...}}}`` shape) must
   parse under the current grammar, with each cached variant still
-  registered.
+  registered; ``shard_entries`` keys (the shard-count axis —
+  ``shards|max=<M>|<v7 key>``) must parse and carry a sane S.
 
 >>> from repro.kernels import autotune
 >>> fp = autotune._make_fingerprint(4, 4, (16, 16), 8, 25, 40, 512)
@@ -26,7 +27,7 @@ True
 >>> parse_key("v5|op=spmm|nbr=4")  # doctest: +IGNORE_EXCEPTION_DETAIL
 Traceback (most recent call last):
     ...
-StaleKeyError: stale fingerprint grammar v5 (current: v6) in key ...
+StaleKeyError: stale fingerprint grammar v5 (current: v7) in key ...
 """
 from __future__ import annotations
 
@@ -39,10 +40,13 @@ import re
 from repro.analysis.report import Finding
 
 _KEY_RE = re.compile(
-    r"^v6\|op=(?P<op>[a-z_]+)\|nbr=(?P<nbr>\d+)\|nbc=(?P<nbc>\d+)"
+    r"^v7\|op=(?P<op>[a-z_]+)\|nbr=(?P<nbr>\d+)\|nbc=(?P<nbc>\d+)"
     r"\|b=(?P<h>\d+)x(?P<w>\d+)\|nnzb=(?P<nnzb>\d+)\|pad=(?P<pad>\d+)"
     r"\|skew=(?P<skew>\d+)\|n=(?P<n>\d+)\|ro=(?P<ro>[A-Za-z0-9_]+)"
-    r"\|ns=(?P<ns>\d+)\|mb=(?P<mb>\d+)$")
+    r"\|ns=(?P<ns>\d+)\|mb=(?P<mb>\d+)\|nk=(?P<nk>\d+)$")
+
+# shard-count cache entries: the mesh cap prefixed onto a full v7 key
+_SHARD_KEY_RE = re.compile(r"^shards\|max=(?P<max>\d+)\|(?P<fp>v\d+\|.+)$")
 
 _STALE_RE = re.compile(r"^v(\d+)\|")
 
@@ -50,7 +54,7 @@ _OPS = ("spmm", "sddmm", "attn")
 
 
 class StaleKeyError(ValueError):
-    """A key from a retired (v1-v5) fingerprint grammar."""
+    """A key from a retired (v1-v6) fingerprint grammar."""
 
 
 def parse_key(key: str):
@@ -61,14 +65,14 @@ def parse_key(key: str):
     m = _KEY_RE.match(key)
     if m is None:
         sv = _STALE_RE.match(key)
-        if sv and int(sv.group(1)) < 6:
+        if sv and int(sv.group(1)) < 7:
             raise StaleKeyError(
-                f"stale fingerprint grammar v{sv.group(1)} (current: v6) "
+                f"stale fingerprint grammar v{sv.group(1)} (current: v7) "
                 f"in key {key!r} — regenerate: delete the stale autotune "
                 "cache (REPRO_AUTOTUNE_CACHE) or refresh the baseline "
                 "with `python benchmarks/<bench>.py --smoke --out "
                 "benchmarks/BENCH_<name>.baseline.json`")
-        raise ValueError(f"key {key!r} does not match the v6 fingerprint "
+        raise ValueError(f"key {key!r} does not match the v7 fingerprint "
                          "grammar")
     g = m.groupdict()
     return autotune.Fingerprint(
@@ -76,7 +80,17 @@ def parse_key(key: str):
         block=(int(g["h"]), int(g["w"])), nnzb=int(g["nnzb"]),
         pad_bucket=int(g["pad"]), skew_bucket=int(g["skew"]),
         n_bucket=int(g["n"]), reorder=g["ro"], n_shards=int(g["ns"]),
-        max_bpr=int(g["mb"]), op=g["op"])
+        max_bpr=int(g["mb"]), op=g["op"], n_chunks=int(g["nk"]))
+
+
+def parse_shard_key(key: str):
+    """Strict inverse of ``autotune.shard_entry_key`` — returns
+    ``(max_shards, Fingerprint)`` or raises like ``parse_key``."""
+    m = _SHARD_KEY_RE.match(key)
+    if m is None:
+        raise ValueError(f"key {key!r} does not match the shard-entry "
+                         "grammar shards|max=<M>|<fingerprint>")
+    return int(m.group("max")), parse_key(m.group("fp"))
 
 
 def sample_fingerprints():
@@ -86,14 +100,14 @@ def sample_fingerprints():
     from repro.kernels import autotune
     from repro.analysis import verify_launch
     fps = []
-    for (op, reorder, ns, block, nbr, nnzb, pad, skew, n) in \
+    for (op, reorder, ns, nk, block, nbr, nnzb, pad, skew, n) in \
             itertools.product(
-                _OPS, ("identity", "jaccard"), (1, 4),
+                _OPS, ("identity", "jaccard"), (1, 4), (1, 4),
                 ((16, 16), (32, 16)), (4, 16), (8, 64),
                 (0, 35), (0, 120), (64, 512)):
         fps.append(autotune._make_fingerprint(
             nbr, nbr + 1, block, nnzb, pad, skew, n, reorder=reorder,
-            n_shards=ns, max_bpr=max(1, nnzb // nbr), op=op))
+            n_shards=ns, max_bpr=max(1, nnzb // nbr), op=op, n_chunks=nk))
     for case in verify_launch.structure_zoo():
         metas = case.meta.shard_metas if hasattr(case.meta, "shard_metas") \
             else (case.meta,)
@@ -182,6 +196,19 @@ def audit_files(root: str) -> list:
                         "fingerprint-audit", path, 0,
                         f"cached variant {variant!r} for {key!r} is not "
                         "in the current registry — stale cache"))
+        if isinstance(data, dict) and \
+                isinstance(data.get("shard_entries"), dict):
+            for key, entry in data["shard_entries"].items():
+                try:
+                    parse_shard_key(key)
+                except ValueError as e:
+                    findings.append(Finding("fingerprint-audit", path, 0,
+                                            f"shard-entry key invalid: {e}"))
+                ns = (entry or {}).get("n_shards")
+                if not isinstance(ns, int) or ns < 1:
+                    findings.append(Finding(
+                        "fingerprint-audit", path, 0,
+                        f"shard entry {key!r} has invalid n_shards={ns!r}"))
     return findings
 
 

@@ -403,6 +403,50 @@ def assert_launch_ok(meta, backend: str, *, n: int, bn: int = 512,
             f"op={op!r}, n={n}, bn={bn}:\n  - " + "\n  - ".join(errs))
 
 
+def verify_chunk_schedule(bounds, n: int, *, block=None, bn: int = 512,
+                          vmem_budget: int =
+                          workspace.DEFAULT_VMEM_BUDGET) -> list:
+    """Invariants of an overlap chunk schedule (``dist_spmm
+    .chunk_schedule``): the chunks must partition ``[0, n)`` EXACTLY —
+    contiguous, strictly ascending, non-empty, no gaps or overlaps — or
+    the pipelined concat is not bit-identical to the single-shot panel
+    (dropped/duplicated columns).  With ``block`` given, each chunk's
+    double-buffered working set must also fit the VMEM budget (chunk
+    widths never exceed the full panel, so this catches only schedules
+    someone hand-built wrong).  Returns error strings (empty = ok)."""
+    errs = []
+    try:
+        bounds = [(int(lo), int(hi)) for lo, hi in bounds]
+    except (TypeError, ValueError):
+        return [f"chunk schedule {bounds!r} is not a list of (start, stop)"]
+    if not bounds:
+        return [f"chunk schedule empty for panel width n={n}"]
+    if bounds[0][0] != 0:
+        errs.append(f"first chunk starts at {bounds[0][0]}, not 0")
+    if bounds[-1][1] != n:
+        errs.append(f"last chunk stops at {bounds[-1][1]}, not n={n} — "
+                    "the schedule does not cover the panel")
+    for i, (lo, hi) in enumerate(bounds):
+        if hi <= lo:
+            errs.append(f"chunk {i} ({lo}, {hi}) is empty or descending")
+    for i in range(1, len(bounds)):
+        prev_hi, lo = bounds[i - 1][1], bounds[i][0]
+        if lo != prev_hi:
+            errs.append(
+                f"chunk {i} starts at {lo} but chunk {i - 1} stopped at "
+                f"{prev_hi} — {'overlap (columns accumulated twice)' if lo < prev_hi else 'gap (columns dropped)'}")
+    if block is not None and not errs:
+        from repro.kernels import ops
+        for i, (lo, hi) in enumerate(bounds):
+            need = workspace.spmm_cell_bytes(
+                tuple(block), ops._clamp_bn(bn, hi - lo)) * 2
+            if need > vmem_budget:
+                errs.append(
+                    f"chunk {i} width {hi - lo}: working set {need} B "
+                    f"exceeds the VMEM budget {vmem_budget} B")
+    return errs
+
+
 def verify_page_table(mask, seq_len: int, block,
                       resident_pages=None) -> list:
     """Paged-KV page-table invariants (PR 8): the table
@@ -558,6 +602,18 @@ def run_verify(vmem_budget: int = workspace.DEFAULT_VMEM_BUDGET,
                     emit(case, [e for e in verify_launch(
                         m, backend, n=n, op=op, vmem_budget=vmem_budget)
                         if e])
+        # overlap chunk schedules: the pipelined dispatch is only
+        # bit-identical if every (n, n_chunks) schedule partitions the
+        # panel exactly and each chunk's working set stays within VMEM
+        from repro.launch.dist_spmm import chunk_schedule
+        blk = (case.meta.shard_metas[0].block
+               if hasattr(case.meta, "shard_metas") else case.meta.block)
+        for n in n_values:
+            for k in (1, 2, 4):
+                emit(case, [f"chunk schedule n={n} k={k}: {e}"
+                            for e in verify_chunk_schedule(
+                                chunk_schedule(n, k), n, block=blk,
+                                vmem_budget=vmem_budget)])
 
     # paged-KV page tables: exact mask-support coverage + placement
     # budgets, per mask family, with and without an offload budget

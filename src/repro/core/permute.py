@@ -386,6 +386,48 @@ def shard_bins(bpr: np.ndarray, n_shards: int, *,
     return assign
 
 
+def split_heavy_rows(bpr: np.ndarray, max_load: int
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Entry-granular fragments of a block-row load vector.
+
+    The LPT in :func:`shard_bins` places whole block-rows, so a single
+    block-row heavier than the per-shard budget can never fit — the
+    extreme-skew failure mode of the partitioned execution path
+    (``launch.dist_spmm``).  This splits each such row into near-equal
+    CONTIGUOUS entry ranges of at most ``max_load`` blocks; the fragments
+    are what the LPT then places (the row's partial products recombine
+    with a sum at gather time).
+
+    Returns ``(frag_row, frag_start, frag_len)``, one entry per fragment
+    in ascending (row, start) order: the owning block-row, the offset of
+    the fragment's first entry within the row, and its entry count.  Rows
+    at or under ``max_load`` come back as a single fragment, so with no
+    heavy row this is the identity table ``(arange, zeros, bpr)``.
+
+    >>> import numpy as np
+    >>> fr, fs, fl = split_heavy_rows(np.array([2, 7, 1]), 3)
+    >>> fr.tolist(), fs.tolist(), fl.tolist()
+    ([0, 1, 1, 1, 2], [0, 0, 3, 5, 0], [2, 3, 2, 2, 1])
+    """
+    if max_load < 1:
+        raise ValueError(f"max_load must be >= 1, got {max_load}")
+    bpr = np.asarray(bpr, dtype=np.int64)
+    rows, starts, lens = [], [], []
+    for r, load in enumerate(bpr):
+        load = int(load)
+        k = max(-(-load // int(max_load)), 1)
+        base, rem = divmod(load, k)
+        off = 0
+        for i in range(k):
+            size = base + (1 if i < rem else 0)
+            rows.append(r)
+            starts.append(off)
+            lens.append(size)
+            off += size
+    return (np.asarray(rows, np.int64), np.asarray(starts, np.int64),
+            np.asarray(lens, np.int64))
+
+
 def shard_balance_rows(csr: sp.csr_matrix, block: Tuple[int, int] = (128, 128),
                        n_shards: int = 8) -> np.ndarray:
     """Element-row permutation from the block-row LPT shard balancing

@@ -51,17 +51,24 @@ class SparsitySpec:
     loads over ``reorder_shards`` shards (0 = derive from the runtime
     device count via ``launch.sharding.spmm_shard_count``).
 
-    ``shards > 0`` switches the layer to the PARTITIONED execution path
-    (``launch.dist_spmm``): the weight is split over block-rows into
-    ``shards`` load-balanced slices with static per-shard schedules, each
-    shard resolves its own kernel variant from its REAL structure stats
-    (the per-shard ``SparseMeta`` inside the returned ``ShardedMeta``),
-    and the apply runs as a ``shard_map`` when a compatible mesh is active
-    (``dist_spmm.use_spmm_mesh``) or as the in-process equivalent
-    otherwise.  Per-shard slice shapes are derived from the layer dims
-    alone (``shard_shapes``), so scan-stacked layers with different
-    structures still share every leaf shape.  ``shard_cols`` adds the
-    optional 2D column split over the activation panel.
+    ``shards > 0`` (or ``shards="auto"``) switches the layer to the
+    PARTITIONED execution path (``launch.dist_spmm``): the weight is
+    split over block-rows into load-balanced slices with static per-shard
+    schedules, each shard resolves its own kernel variant from its REAL
+    structure stats (the per-shard ``SparseMeta`` inside the returned
+    ``ShardedMeta``), and the apply runs as a ``shard_map`` when a
+    compatible mesh is active (``dist_spmm.use_spmm_mesh``) or as the
+    in-process equivalent otherwise.  ``shards="auto"`` resolves the
+    shard count through the autotuner's shard-count axis
+    (``resolved_shards`` — a DIMS-ONLY pseudo meta feeds
+    ``Autotuner.pick_shards``, so scan-stacked layers sharing this spec
+    resolve the same S and keep identical leaf shapes).  Per-shard slice
+    shapes are derived from the layer dims alone (``shard_shapes``), so
+    scan-stacked layers with different structures still share every leaf
+    shape.  ``shard_cols`` adds the optional 2D column split over the
+    activation panel; ``shard_chunks`` sets the overlap pipeline depth
+    the sharded apply runs with (``spmm_sharded(n_chunks=...)`` — chunked
+    execution is bit-identical to single-shot, so the default is on).
 
     Example — a partitioned block-sparse layer, applied and then
     re-derived statically (no params) via ``sparse_linear_meta``:
@@ -89,8 +96,51 @@ class SparsitySpec:
     tune_n: int = 0                 # measured sweep at init for this N
     reorder: str = "identity"       # weight row-permutation scheme
     reorder_shards: int = 0         # shard_balance bins (0 = auto)
-    shards: int = 0                 # >0: row-partitioned execution shards
+    shards: object = 0              # >0 | "auto": partitioned execution
     shard_cols: int = 1             # optional column split over activations
+    shard_chunks: int = 2           # overlap pipeline depth (sharded path)
+
+
+def is_sharded(spec: SparsitySpec) -> bool:
+    """True when the spec selects the partitioned execution path — an
+    explicit shard count OR the ``"auto"`` sentinel (which may still
+    resolve to S=1; the layer then runs the sharded code path with one
+    shard, keeping leaf layouts uniform across a spec)."""
+    return spec.shards == "auto" or \
+        (isinstance(spec.shards, int) and spec.shards > 0)
+
+
+def resolved_shards(spec: SparsitySpec, out_dim: int, in_dim: int,
+                    max_shards: Optional[int] = None) -> int:
+    """The spec's effective shard count for a layer of these dims.
+
+    Explicit ``shards=N`` passes through; ``shards="auto"`` asks the
+    autotuner's shard-count axis (``Autotuner.pick_shards``) with a
+    DIMS-ONLY pseudo meta — the same ``_nnzb_for`` budget the leaf shapes
+    use, deliberately NOT any one layer's drawn structure, so every
+    scan-stacked layer sharing the spec resolves the same S and the leaf
+    shapes stay shared.  ``max_shards`` defaults to the runtime mesh/
+    device size (``launch.sharding.spmm_shard_count``); the resolution is
+    deterministic in (dims, spec, max_shards) and cached under the v7
+    ``shards|...`` key."""
+    if not is_sharded(spec):
+        return 0
+    if spec.shards != "auto":
+        return int(spec.shards)
+    from repro.kernels import autotune
+    h, w = spec.block
+    nbr, nbc = -(-out_dim // h), -(-in_dim // w)
+    nnzb = _nnzb_for(spec, out_dim, in_dim)
+    pseudo = ops.SparseMeta(
+        shape=(out_dim, in_dim), block=spec.block, n_block_rows=nbr,
+        n_block_cols=nbc, nnzb=nnzb, nnzb_t=nnzb, reorder=spec.reorder)
+    if max_shards is None:
+        from repro.launch.sharding import spmm_shard_count  # local: layering
+        max_shards = max(spmm_shard_count(), 1)
+    choice = autotune.get_autotuner().pick_shards(
+        pseudo, spec.tune_n or 512, max_shards=max_shards,
+        n_chunks=max(spec.shard_chunks, 1))
+    return choice.n_shards
 
 
 def _nnzb_for(spec: SparsitySpec, out_dim: int, in_dim: int) -> int:
@@ -111,7 +161,8 @@ def _reorder_shards(spec: SparsitySpec) -> int:
     return spmm_shard_count()
 
 
-def shard_shapes(spec: SparsitySpec, out_dim: int, in_dim: int):
+def shard_shapes(spec: SparsitySpec, out_dim: int, in_dim: int,
+                 n_shards: Optional[int] = None):
     """Dims-only per-shard static sizes: (rows_per_shard, nnzb_per_shard,
     nnzb_t_per_shard).
 
@@ -120,9 +171,12 @@ def shard_shapes(spec: SparsitySpec, out_dim: int, in_dim: int):
     The entry budget is the balanced average plus 25% skew headroom (and a
     small-case floor) plus one slot per row for virtual-row sentinels;
     ``prepare_sharded`` raises if a structure is too skewed to fit, which
-    for the near-uniform ``random_bcsr_exact`` patterns does not happen."""
+    for the near-uniform ``random_bcsr_exact`` patterns does not happen.
+    ``n_shards`` overrides the spec's count (the resolved value when
+    ``spec.shards="auto"``)."""
     h, w = spec.block
-    S = spec.shards
+    S = n_shards if n_shards is not None \
+        else resolved_shards(spec, out_dim, in_dim)
     nbr, nbc = -(-out_dim // h), -(-in_dim // w)
     nnzb = _nnzb_for(spec, out_dim, in_dim)
     rps = -(-nbr // S)
@@ -158,11 +212,12 @@ def sparse_linear_meta(seed: int, in_dim: int, out_dim: int,
     schedule from the permuted structure — identically to dispatching on
     the meta ``init_sparse_linear`` returned."""
     a = _pattern_for(seed, in_dim, out_dim, spec)
-    if spec.shards > 0:
+    if is_sharded(spec):
         from repro.launch import dist_spmm  # local: layering
-        rps, nnzb_ps, _ = shard_shapes(spec, out_dim, in_dim)
+        S = resolved_shards(spec, out_dim, in_dim)
+        rps, nnzb_ps, _ = shard_shapes(spec, out_dim, in_dim, n_shards=S)
         return dist_spmm.prepare_sharded_meta(
-            a, spec.shards, col_shards=spec.shard_cols,
+            a, S, col_shards=spec.shard_cols,
             reorder=spec.reorder, rows_per_shard=rps,
             nnzb_per_shard=nnzb_ps)
     return ops.prepare_sparse_meta(
@@ -236,16 +291,17 @@ def init_sparse_linear(key: int, in_dim: int, out_dim: int,
     out_dim, spec)`` returns an equal meta (the specs-vs-init contract
     ``tests/test_static_meta.py`` pins)."""
     a = _pattern_for(key, in_dim, out_dim, spec)
-    if spec.shards > 0:
+    if is_sharded(spec):
         from repro.launch import dist_spmm  # local: layering
-        rps, nnzb_ps, _ = shard_shapes(spec, out_dim, in_dim)
+        S = resolved_shards(spec, out_dim, in_dim)
+        rps, nnzb_ps, _ = shard_shapes(spec, out_dim, in_dim, n_shards=S)
         sharr, smeta = dist_spmm.prepare_sharded(
-            a, spec.shards, col_shards=spec.shard_cols, dtype=dtype,
+            a, S, col_shards=spec.shard_cols, dtype=dtype,
             reorder=spec.reorder, rows_per_shard=rps,
             nnzb_per_shard=nnzb_ps)
         if spec.backend == "auto" and spec.tune_n > 0:
             # sharded analogue of the unsharded tune() below: measured
-            # winners land under each shard's v4 fingerprint
+            # winners land under each shard's v7 fingerprint
             dist_spmm.tune_shards(sharr, smeta, spec.tune_n,
                                   interpret=spec.interpret)
         params = {
@@ -308,10 +364,11 @@ def sparse_linear_specs(in_dim: int, out_dim: int, spec: SparsitySpec,
     nnzb = _nnzb_for(spec, out_dim, in_dim)
     nbr, nbc = -(-out_dim // h), -(-in_dim // w)
     sds = jax.ShapeDtypeStruct
-    if spec.shards > 0:
+    if is_sharded(spec):
         from repro.launch import dist_spmm  # local: layering
-        S = spec.shards
-        rps, nnzb_ps, nnzb_t_ps = shard_shapes(spec, out_dim, in_dim)
+        S = resolved_shards(spec, out_dim, in_dim)
+        rps, nnzb_ps, nnzb_t_ps = shard_shapes(spec, out_dim, in_dim,
+                                               n_shards=S)
         params = {
             "vals": sds((nnzb, h, w), dtype),
             "shard_src": sds((S, nnzb_ps), jnp.int32),
@@ -357,8 +414,9 @@ def shard_balance_report(in_dim: int, out_dim: int, spec: SparsitySpec,
     before any launch)."""
     from repro.launch import dist_spmm  # local: layering
     a = _pattern_for(seed, in_dim, out_dim, spec)
-    rps, _, _ = shard_shapes(spec, out_dim, in_dim)
-    return dist_spmm.shard_balance_stats(a, spec.shards, rows_per_shard=rps)
+    S = resolved_shards(spec, out_dim, in_dim)
+    rps, _, _ = shard_shapes(spec, out_dim, in_dim, n_shards=S)
+    return dist_spmm.shard_balance_stats(a, S, rows_per_shard=rps)
 
 
 def apply_sparse_linear(params: dict, meta, x: jnp.ndarray,
@@ -371,15 +429,17 @@ def apply_sparse_linear(params: dict, meta, x: jnp.ndarray,
     which is exactly the paper's kernel with B = the local activation
     panel (§Perf C2).
 
-    ``spec.shards > 0`` (``meta`` is a ``ShardedMeta``): the weight's
-    block-rows are partitioned instead — each shard streams only its
-    balanced slice, as a ``shard_map`` over the mesh installed by
-    ``dist_spmm.use_spmm_mesh`` (in-process equivalent when none is)."""
+    Sharded (``meta`` is a ``ShardedMeta``): the weight's block-rows are
+    partitioned instead — each shard streams only its balanced slice, as
+    a ``shard_map`` over the mesh installed by ``dist_spmm.use_spmm_mesh``
+    (in-process equivalent when none is), with the activation panel
+    pipelined in ``spec.shard_chunks`` overlapped column chunks
+    (bit-identical to single-shot; see ``dist_spmm.spmm_sharded``)."""
     from repro.launch.constrain import BATCH, MODEL, constrain
     lead = x.shape[:-1]
     in_dim = x.shape[-1]
     xt = x.reshape(-1, in_dim).T                     # [K, T]
-    if spec.shards > 0:
+    if is_sharded(spec):
         from repro.launch import dist_spmm  # local: layering
         sharr = dist_spmm.ShardedArrays(
             vals=params["vals"], src_index=params["shard_src"],
@@ -397,7 +457,8 @@ def apply_sparse_linear(params: dict, meta, x: jnp.ndarray,
             xt = constrain(xt, None, BATCH + (MODEL,))
         c = dist_spmm.spmm_sharded(
             sharr, meta, xt, backend=spec.backend, bn=spec.bn,
-            interpret=spec.interpret, mesh=mesh)
+            interpret=spec.interpret, mesh=mesh,
+            n_chunks=max(spec.shard_chunks, 1))
         if mesh is None:
             c = constrain(c, None, BATCH + (MODEL,))
         return c.T.reshape(*lead, meta.shape[0])

@@ -251,7 +251,15 @@ class Fingerprint:
     attention vs the composed triple — a third disjoint pick space over
     the same structures) and bumps the key prefix so v5 caches, which
     predate the family split, are invalidated wholesale rather than
-    partially reused."""
+    partially reused.  v7 adds ``n_chunks`` (``nk=``): the overlap depth
+    of the communication-pipelined sharded execution
+    (``dist_spmm.spmm_sharded(n_chunks=...)``).  It keys the SHARD-COUNT
+    decisions (``pick_shards`` — the best S depends on how much of the B
+    collective the pipeline can hide), NOT the kernel-variant picks:
+    chunking never changes the per-shard kernel launch shape, and variant
+    picks stay resolved at the full panel width (``nk=1``) so the chunked
+    path dispatches bit-identically to the unchunked one even under
+    measured caches."""
     n_block_rows: int
     n_block_cols: int
     block: Tuple[int, int]
@@ -263,41 +271,45 @@ class Fingerprint:
     n_shards: int = 1    # shard count of the partitioned operand (1 = whole)
     max_bpr: int = 0     # row_loop schedule bound (0 = unknown/dims-only)
     op: str = "spmm"     # compute family (spmm | sddmm | attn)
+    n_chunks: int = 1    # B-panel overlap chunks (shard-count key axis)
 
     def key(self) -> str:
         h, w = self.block
-        return (f"v6|op={self.op}"
+        return (f"v7|op={self.op}"
                 f"|nbr={self.n_block_rows}|nbc={self.n_block_cols}"
                 f"|b={h}x{w}|nnzb={self.nnzb}|pad={self.pad_bucket}"
                 f"|skew={self.skew_bucket}|n={self.n_bucket}"
-                f"|ro={self.reorder}|ns={self.n_shards}|mb={self.max_bpr}")
+                f"|ro={self.reorder}|ns={self.n_shards}|mb={self.max_bpr}"
+                f"|nk={self.n_chunks}")
 
 
 def _make_fingerprint(nbr: int, nbc: int, block, nnzb: int,
                       pad_pct: int, cv_pct: int, n: int,
                       reorder: str = "identity",
                       n_shards: int = 1, max_bpr: int = 0,
-                      op: str = "spmm") -> Fingerprint:
+                      op: str = "spmm", n_chunks: int = 1) -> Fingerprint:
     """Single bucketing site for both fingerprint paths — the meta-side and
     BCSR-side keys must agree bit-for-bit or cached picks stop matching."""
     return Fingerprint(
         n_block_rows=nbr, n_block_cols=nbc, block=tuple(block), nnzb=nnzb,
         pad_bucket=pad_pct // 10, skew_bucket=cv_pct // 25,
         n_bucket=_pow2_bucket(n), reorder=reorder, n_shards=n_shards,
-        max_bpr=max_bpr, op=op)
+        max_bpr=max_bpr, op=op, n_chunks=n_chunks)
 
 
 def fingerprint(meta: ops.SparseMeta, n: int,
-                op: str = "spmm") -> Fingerprint:
+                op: str = "spmm", n_chunks: int = 1) -> Fingerprint:
     """Fingerprint from the static meta ``prepare_sparse`` built (or a
     per-shard meta from ``dist_spmm.prepare_sharded`` — its ``n_shards``
-    and ``max_bpr`` ride into the v6 key).  ``op`` selects the compute
-    family's key space (``spmm`` | ``sddmm`` | ``attn``)."""
+    and ``max_bpr`` ride into the v7 key).  ``op`` selects the compute
+    family's key space (``spmm`` | ``sddmm`` | ``attn``); ``n_chunks``
+    (``nk=``) is the overlap depth — pass it only for shard-count
+    decisions, kernel-variant picks keep the default 1."""
     return _make_fingerprint(meta.n_block_rows, meta.n_block_cols,
                              meta.block, meta.nnzb,
                              meta.padding_ratio_pct, meta.bpr_cv_pct, n,
                              reorder=meta.reorder, n_shards=meta.n_shards,
-                             max_bpr=meta.max_bpr, op=op)
+                             max_bpr=meta.max_bpr, op=op, n_chunks=n_chunks)
 
 
 def fingerprint_bcsr(a: bcsr_lib.BCSR, n: int,
@@ -386,6 +398,92 @@ def analytic_choice(meta: ops.SparseMeta, n: int,
     return KernelChoice(name, bn, source="analytic", predicted_us=t * 1e6)
 
 
+# ----------------------------------------------------------- shard-count axis
+# Candidate shard counts for the self-sizing distributed path
+# (``dist_spmm``): powers of two up to the mesh/row limit, 1 = unsharded.
+SHARD_CANDIDATES = (1, 2, 4, 8)
+
+_T_INIT = 5e-6        # per-launch latency (matches pm.spmm_model_time)
+_T_SHARD_SYNC = 5e-7  # cross-shard coordination cost per shard doubling
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardChoice:
+    """A cached shard-count decision (the S analogue of KernelChoice)."""
+    n_shards: int
+    source: str = "analytic"    # analytic | measured
+    predicted_us: float = 0.0
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "ShardChoice":
+        return ShardChoice(n_shards=int(d["n_shards"]),
+                           source=d.get("source", "analytic"),
+                           predicted_us=float(d.get("predicted_us", 0.0)))
+
+
+def shard_candidates(max_shards: int, n_block_rows: int) -> Tuple[int, ...]:
+    """The S values ``pick_shards`` considers: ``SHARD_CANDIDATES`` capped
+    by the mesh size AND the block-row count (a shard with zero row slots
+    is pure overhead)."""
+    cap = max(min(int(max_shards), max(int(n_block_rows), 1)), 1)
+    cands = tuple(s for s in SHARD_CANDIDATES if s <= cap)
+    return cands or (1,)
+
+
+def _pipeline_time(t_comp: float, t_coll: float, n_chunks: int) -> float:
+    """Total time of a ``k``-stage software pipeline that issues the
+    collective for chunk ``i+1`` before the matmul over chunk ``i``: only
+    the first chunk's collective is exposed; every later stage runs at the
+    rate of the slower leg."""
+    k = max(int(n_chunks), 1)
+    return t_coll / k + t_comp / k + (k - 1) / k * max(t_comp, t_coll)
+
+
+def analytic_shard_choice(meta: ops.SparseMeta, n: int, *,
+                          max_shards: int = 8, n_chunks: int = 1,
+                          op: str = "spmm") -> ShardChoice:
+    """Model-based shard count for the partitioned execution path.
+
+    The S=1 arm is the plain paper Eq. 1 (no collective: a single device
+    already holds B).  For S>1 the per-shard work is the balanced LPT load
+    (``ceil(nnzb/S)`` entries plus one virtual-row sentinel per row slot),
+    the B broadcast crosses ICI once, and the two legs compose through the
+    ``n_chunks``-deep overlap pipeline — so deeper chunking makes larger S
+    win sooner, which is exactly why ``nk=`` is part of the cache key.
+    A ``log2(S)`` coordination term keeps the model from racing to the
+    mesh cap on structures whose compute no longer dominates.  Ties go to
+    the SMALLER S (fewer moving parts at equal predicted time)."""
+    h, w = meta.block
+    nbr = max(meta.n_block_rows, 1)
+    bn = pick_bn(meta, n, get_variant(default_variant("spmm")).bn_candidates)
+    tiles = _n_tiles(n, bn)
+    _, _, t_e = pm.block_mma_time(h, w, bn)
+    t_coll = float(meta.shape[1]) * n * _bytes_per_el() / pm.ICI_BW
+    best: Optional[Tuple[float, int]] = None
+    for s in shard_candidates(max_shards, nbr):
+        if s == 1:
+            t = pm.spmm_model_time(meta.nnzb * tiles, h, w, bn)
+        else:
+            load = -(-meta.nnzb // s) + -(-nbr // s)
+            t_comp = t_e * load * tiles
+            t = (_T_INIT + _T_SHARD_SYNC * (s.bit_length() - 1)
+                 + _pipeline_time(t_comp, t_coll, n_chunks))
+        if best is None or t < best[0]:
+            best = (t, s)
+    t, s = best
+    return ShardChoice(s, source="analytic", predicted_us=t * 1e6)
+
+
+def shard_entry_key(fp: Fingerprint, max_shards: int) -> str:
+    """Cache key of a shard-count decision: the mesh cap prefixed onto the
+    structure's v7 fingerprint (which carries ``nk=``), so decisions made
+    for different device budgets or overlap depths never alias."""
+    return f"shards|max={int(max_shards)}|{fp.key()}"
+
+
 # ----------------------------------------------------------------- autotuner
 class Autotuner:
     """Fingerprint -> KernelChoice cache with analytic and measured fills.
@@ -411,7 +509,7 @@ class Autotuner:
     >>> choice = tuner.pick(meta, n=128)
     >>> choice.variant in autotune.variant_names()
     True
-    >>> tuner.pick(meta, n=128) is choice     # cached under the v6 key
+    >>> tuner.pick(meta, n=128) is choice     # cached under the v7 key
     True
     """
 
@@ -419,6 +517,7 @@ class Autotuner:
         self.cache_path = cache_path or os.environ.get(
             "REPRO_AUTOTUNE_CACHE") or None
         self._mem: Dict[str, KernelChoice] = {}
+        self._shards: Dict[str, ShardChoice] = {}
         if self.cache_path:
             self.load()
 
@@ -430,6 +529,8 @@ class Autotuner:
             for k, d in payload.get("entries", {}).items():
                 if d.get("variant") in _REGISTRY:
                     self._mem[k] = KernelChoice.from_dict(d)
+            for k, d in payload.get("shard_entries", {}).items():
+                self._shards[k] = ShardChoice.from_dict(d)
         except (OSError, ValueError, KeyError, AttributeError, TypeError):
             pass  # absent/corrupt/wrong-shape cache -> start empty
 
@@ -437,7 +538,9 @@ class Autotuner:
         if not self.cache_path:
             return
         payload = {"version": 1,
-                   "entries": {k: c.to_dict() for k, c in self._mem.items()}}
+                   "entries": {k: c.to_dict() for k, c in self._mem.items()},
+                   "shard_entries": {k: c.to_dict()
+                                     for k, c in self._shards.items()}}
         tmp = f"{self.cache_path}.tmp.{os.getpid()}"
         try:
             os.makedirs(os.path.dirname(os.path.abspath(self.cache_path)),
@@ -458,6 +561,39 @@ class Autotuner:
         if persist:
             self.save()
 
+    def get_shards(self, fp: Fingerprint,
+                   max_shards: int) -> Optional[ShardChoice]:
+        return self._shards.get(shard_entry_key(fp, max_shards))
+
+    def put_shards(self, fp: Fingerprint, max_shards: int,
+                   choice: ShardChoice, persist: bool = True) -> None:
+        self._shards[shard_entry_key(fp, max_shards)] = choice
+        if persist:
+            self.save()
+
+    def pick_shards(self, meta: ops.SparseMeta, n: int, *,
+                    max_shards: int = 8, n_chunks: int = 1,
+                    op: str = "spmm") -> ShardChoice:
+        """Cached shard count for this structure, analytic on a miss.
+
+        The S analogue of ``pick``: static info only, trace-safe, never
+        blocks dispatch.  Decisions key on
+        ``shards|max=<mesh cap>|<v7 fingerprint>`` — the fingerprint
+        carries ``nk=n_chunks``, so the same structure planned with and
+        without overlap resolves (and caches) independently.  Measured
+        winners land here via ``dist_spmm.tune_shard_count``."""
+        fp = fingerprint(meta, n, op=op, n_chunks=n_chunks)
+        hit = self.get_shards(fp, max_shards)
+        if hit is not None:
+            return hit
+        choice = analytic_shard_choice(meta, n, max_shards=max_shards,
+                                       n_chunks=n_chunks, op=op)
+        # cache in memory only — analytic resolutions are cheap to
+        # recompute and may run inside first-trace paths (same policy as
+        # pick())
+        self._shards[shard_entry_key(fp, max_shards)] = choice
+        return choice
+
     def __len__(self) -> int:
         return len(self._mem)
 
@@ -466,7 +602,7 @@ class Autotuner:
         """Cached choice for this structure, analytic on a miss.  Static
         info only — safe inside jit traces (``backend="auto"`` path).
         ``op`` selects the variant family (``spmm`` | ``sddmm`` | ``attn``)
-        and its disjoint v6 key space."""
+        and its disjoint v7 key space."""
         fp = fingerprint(meta, n, op=op)
         hit = self.get(fp)
         if hit is not None:
@@ -491,7 +627,7 @@ class Autotuner:
         Always measures the family's hardcoded default (``nnz_stream`` /
         ``sddmm_stream``, bn=512) so the winner is never slower than it;
         returns (choice, {candidate: sec}).  The winner is cached (and
-        persisted) under the matrix's v6 ``op=``-scoped fingerprint.
+        persisted) under the matrix's v7 ``op=``-scoped fingerprint.
         ``reorder`` mirrors the ``prepare_sparse`` arguments so the sweep
         measures (and the fingerprint matches) the permuted structure the
         apply path will actually dispatch on.  For ``op="sddmm"`` the

@@ -18,8 +18,29 @@ scales past one chip.  This module turns the reorder pipeline's dormant
     identical math (the fallback when no compatible mesh exists — unit
     tests, single-chip serving).  Each shard resolves its OWN kernel
     variant through ``ops.resolve_backend``: per-shard metas carry
-    ``n_shards`` into the v4 autotune fingerprint, and shards whose picks
+    ``n_shards`` into the v7 autotune fingerprint, and shards whose picks
     differ dispatch through a ``lax.switch`` on the mesh axis index.
+  * ``spmm_sharded(n_chunks=K)`` pipelines the B operand movement against
+    shard compute (Acc-SpMM's overlap, lifted to the collective level):
+    the panel is cut into K ascending column chunks over the ``spmm_col``
+    axis and the staging of chunk k+1 is ISSUED before the matmul over
+    chunk k (``lax.optimization_barrier`` pins the issue order; XLA's
+    async copy/collective engine runs the movement under the compute).
+    Column panels of a matmul are independent, so the chunked result is
+    BIT-IDENTICAL to the unchunked one — fixed ascending chunk order,
+    same per-column accumulation tree, and kernel picks resolved at the
+    full panel width (``tests/test_sharded_properties.py`` pins this).
+  * Shard count is an AUTOTUNE AXIS: ``prepare_sharded(a, "auto")``
+    resolves S through ``Autotuner.pick_shards`` (analytic pipeline
+    model over {1,2,4,8}, cached under ``shards|max=<M>|<v7 nk= key>``),
+    and ``tune_shard_count`` runs the timed S micro-sweep.
+  * Extreme single-row skew is handled by ENTRY-GRANULAR SPLITS
+    (``split_heavy_rows=True``): a block-row heavier than the balanced
+    per-shard budget splits into contiguous entry fragments placed by the
+    same LPT (``core.permute.split_heavy_rows``), and the row's partial
+    sums recombine with a scatter-add at gather time.  Without splits, a
+    structure whose derived budget would silently over-allocate (every
+    shard padded to one dominant row's size) now raises instead.
   * Results gather back to ORIGINAL row order (``gather_rows`` composes
     the optional pre-reorder with the partition permutation), so the
     sharding — like the PR 2 reorder — never leaks to callers; gradients
@@ -27,10 +48,12 @@ scales past one chip.  This module turns the reorder pipeline's dormant
     ``shard_map`` transpose (partial dB psums across shards), and the
     outer gather's transpose (padding rows receive exact zeros).
 
-Wired end-to-end via ``SparsitySpec(shards=...)`` -> ``init_sparse_linear``
--> ``apply_sparse_linear`` (which reads the ambient mesh from
-``use_spmm_mesh``) -> the serve engine's decode path; ``launch.dryrun``
-reports the per-shard nnzb balance of sparse layers.
+Wired end-to-end via ``SparsitySpec(shards=...)`` (``shards="auto"``
+resolves through the same pick) -> ``init_sparse_linear`` ->
+``apply_sparse_linear`` (which reads the ambient mesh from
+``use_spmm_mesh`` and the overlap depth from ``spec.shard_chunks``) ->
+the serve engine's decode path; ``launch.dryrun`` reports the per-shard
+nnzb balance, resolved S, and chunk schedule of sparse layers.
 """
 from __future__ import annotations
 
@@ -76,6 +99,11 @@ class ShardedArrays(NamedTuple):
       t_col_ids  [S, nnzb_t_ps]  LOCAL block-rows of A
       gather_rows [M]            original row -> row of the stacked shard
                                  outputs (composes pre-reorder + partition)
+      split_src   [n_extra]      stacked-output rows of NON-PRIMARY row
+                                 fragments (entry-granular splits); empty
+                                 (0,) when no block-row was split
+      split_dst   [n_extra]      original rows those partial sums add into
+                                 (``out.at[split_dst].add(out_pad[split_src])``)
     """
     vals: jnp.ndarray
     src_index: jnp.ndarray
@@ -86,6 +114,8 @@ class ShardedArrays(NamedTuple):
     t_row_ids: jnp.ndarray
     t_col_ids: jnp.ndarray
     gather_rows: jnp.ndarray
+    split_src: Optional[jnp.ndarray] = None
+    split_dst: Optional[jnp.ndarray] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,6 +136,7 @@ class ShardedMeta:
     nnzb_t_per_shard: int
     shard_metas: Tuple[ops.SparseMeta, ...]
     reorder: str = "identity"           # pre-partition scheme (reporting)
+    n_split_fragments: int = 0          # extra (non-primary) row fragments
 
 
 # ------------------------------------------------------------- ambient mesh
@@ -139,6 +170,92 @@ def make_spmm_mesh(n_shards: int, col_shards: int = 1):
     if col_shards > 1:
         return mesh_lib.make_mesh((n_shards, col_shards), (AXIS_ROW, AXIS_COL))
     return mesh_lib.make_mesh((n_shards,), (AXIS_ROW,))
+
+
+# ----------------------------------------------------------------- chunking
+def chunk_schedule(n: int, n_chunks: int) -> Tuple[Tuple[int, int], ...]:
+    """Ascending ``(start, stop)`` column chunks that partition ``[0, n)``.
+
+    The schedule is the overlap pipeline's static contract: chunks are
+    contiguous, strictly ascending, non-empty, and cover every column
+    exactly once (``analysis.verify_launch.verify_chunk_schedule`` checks
+    these invariants over the structure zoo).  ``n_chunks`` is clamped to
+    ``n`` so tiny panels never produce empty chunks.
+
+    >>> chunk_schedule(10, 4)
+    ((0, 3), (3, 6), (6, 9), (9, 10))
+    >>> chunk_schedule(8, 1)
+    ((0, 8),)
+    """
+    if n < 1:
+        raise ValueError(f"panel width must be >= 1, got {n}")
+    if n_chunks < 1:
+        raise ValueError(f"n_chunks must be >= 1, got {n_chunks}")
+    k = min(int(n_chunks), int(n))
+    width = -(-n // k)
+    bounds = []
+    start = 0
+    while start < n:
+        stop = min(start + width, n)
+        bounds.append((start, stop))
+        start = stop
+    return tuple(bounds)
+
+
+def _barrier(x: jnp.ndarray) -> jnp.ndarray:
+    try:
+        return jax.lax.optimization_barrier(x)
+    except AttributeError:      # pragma: no cover - very old JAX
+        return x
+
+
+@jax.custom_vjp
+def _stage(x: jnp.ndarray) -> jnp.ndarray:
+    """Pin the ISSUE point of a chunk's operand movement.
+
+    ``optimization_barrier`` keeps XLA from sinking the staging of chunk
+    k+1 below the matmul over chunk k, so the async copy/collective
+    engine can run the movement under the compute.  Value-identity: the
+    barrier never changes bits, only scheduling freedom — and the custom
+    VJP passes the cotangent straight through (the barrier has no
+    differentiation rule; the chunked forward's real backward runs the
+    SINGLE-SHOT path anyway, see ``spmm_sharded``)."""
+    return _barrier(x)
+
+
+def _stage_fwd(x):
+    return _barrier(x), None
+
+
+def _stage_bwd(_, g):
+    return (g,)
+
+
+_stage.defvjp(_stage_fwd, _stage_bwd)
+
+
+def _run_chunked(run_one, b: jnp.ndarray, n_chunks: int) -> jnp.ndarray:
+    """Double-buffered chunk pipeline over the columns of ``b``.
+
+    Issues the staging of chunk k+1 BEFORE the matmul over chunk k and
+    concatenates the per-chunk panels in fixed ascending order.  Column
+    panels of a matmul are independent — each output column sees the
+    same accumulation tree as in the single-shot call — so the result is
+    bit-identical to ``run_one(b)``."""
+    n = int(b.shape[-1])
+    bounds = chunk_schedule(n, n_chunks)
+    if len(bounds) == 1:
+        return run_one(b)
+    lo0, hi0 = bounds[0]
+    nxt = _stage(b[:, lo0:hi0])
+    parts = []
+    for i, _ in enumerate(bounds):
+        cur = nxt
+        if i + 1 < len(bounds):
+            lo, hi = bounds[i + 1]
+            nxt = _stage(b[:, lo:hi])
+        parts.append(run_one(cur))
+    return jnp.concatenate(parts, axis=1)
 
 
 # ----------------------------------------------------------------- planning
@@ -181,17 +298,31 @@ def _local_stats(rows: np.ndarray, vals_real: np.ndarray, rps: int,
             int(round(cv * 100)))
 
 
-def _prepare_sharded_host(a: bcsr_lib.BCSR, n_shards: int, *,
+def _prepare_sharded_host(a: bcsr_lib.BCSR, n_shards, *,
                           col_shards: int = 1,
                           reorder: str = "identity", tau: float = 0.7,
                           max_candidates: Optional[int] = None,
                           rows_per_shard: Optional[int] = None,
-                          nnzb_per_shard: Optional[int] = None):
+                          nnzb_per_shard: Optional[int] = None,
+                          split_heavy_rows: bool = False):
     """Host-side (numpy) portion of ``prepare_sharded``: pre-reorder,
     partition, per-shard index structure, and the static ``ShardedMeta``
     with its per-shard structure stats.  Returns ``(host_arrays_dict,
     meta)``; ``prepare_sharded`` converts to device arrays,
-    ``prepare_sharded_meta`` keeps only the meta."""
+    ``prepare_sharded_meta`` keeps only the meta.
+
+    ``n_shards="auto"`` resolves the shard count through
+    :func:`resolve_n_shards`.  ``split_heavy_rows=True`` switches to
+    ENTRY-GRANULAR planning: block-rows heavier than the balanced budget
+    split into contiguous entry fragments (``core.permute
+    .split_heavy_rows``) that the LPT places like rows; non-primary
+    fragments are recombined by a scatter-add at gather time (their row
+    indices land in ``split_src`` / ``split_dst``)."""
+    if isinstance(n_shards, str):
+        if n_shards != "auto":
+            raise ValueError(f"n_shards must be an int or 'auto', "
+                             f"got {n_shards!r}")
+        n_shards = resolve_n_shards(a).n_shards
     if n_shards < 1:
         raise ValueError(f"n_shards must be >= 1, got {n_shards}")
     h, w = a.block
@@ -203,31 +334,74 @@ def _prepare_sharded_host(a: bcsr_lib.BCSR, n_shards: int, *,
             n_shards=n_shards, granularity="block_row")
     a_p, real_g = a.ensure_nonempty_rows(return_mask=True)
     nbr, nbc = a_p.n_block_rows, a_p.n_block_cols
+    rowptr = a_p.rowptr
+    bpr = np.diff(rowptr)
+    nnzb_g = a_p.nnzb
 
-    assign, shard_rows, loads, rps = plan_shards(
-        a_p, n_shards, rows_per_shard=rows_per_shard,
-        nnzb_per_shard=nnzb_per_shard)
-    if rps * n_shards < nbr:
-        raise ValueError(f"rows_per_shard={rps} too small for {nbr} "
-                         f"block-rows over {n_shards} shards")
+    if split_heavy_rows:
+        if nnzb_per_shard is not None:
+            raise ValueError(
+                "split_heavy_rows derives its own per-shard budget from "
+                "the balanced load; pinning nnzb_per_shard alongside it "
+                "is contradictory — drop one of the two")
+        # fragment planning: heavy rows split into contiguous entry runs
+        # no larger than the balanced per-shard load, then the SAME LPT
+        # places fragments into row slots (a fragment is a local row)
+        cap = max(-(-nnzb_g // n_shards), 1)
+        frag_row, frag_start, frag_len = permute_lib.split_heavy_rows(
+            bpr, cap)
+        n_frags = int(frag_row.size)
+        rps = rows_per_shard or -(-max(n_frags, 1) // n_shards)
+        if rps * n_shards < n_frags:
+            raise ValueError(
+                f"rows_per_shard={rps} too small for {n_frags} row "
+                f"fragments over {n_shards} shards")
+        assign = permute_lib.shard_bins(frag_len, n_shards,
+                                        rows_per_shard=rps)
+        shard_units = [np.flatnonzero(assign == s) for s in range(n_shards)]
+        unit_row, unit_start, unit_len = frag_row, frag_start, frag_len
+    else:
+        assign, shard_units, _, rps = plan_shards(
+            a_p, n_shards, rows_per_shard=rows_per_shard,
+            nnzb_per_shard=nnzb_per_shard)
+        if rps * n_shards < nbr:
+            raise ValueError(f"rows_per_shard={rps} too small for {nbr} "
+                             f"block-rows over {n_shards} shards")
+        unit_row = np.arange(nbr, dtype=np.int64)
+        unit_start = np.zeros(nbr, np.int64)
+        unit_len = bpr.astype(np.int64)
 
     # per-shard entry lists (entries stay in a_p's global order; local ids
-    # relabel block-rows to each shard's slot space)
-    rowptr = a_p.rowptr
+    # relabel planning units — block-rows, or fragments of them — to each
+    # shard's slot space)
     needed = []
     per_shard = []
     for s in range(n_shards):
-        rows_s = shard_rows[s]
+        units_s = shard_units[s]
         ent = np.concatenate(
-            [np.arange(rowptr[r], rowptr[r + 1]) for r in rows_s]
-        ).astype(np.int64) if rows_s.size else np.zeros(0, np.int64)
-        lrow = np.repeat(np.arange(rows_s.size),
-                         np.diff(rowptr)[rows_s]) if rows_s.size \
+            [rowptr[unit_row[u]] + unit_start[u] +
+             np.arange(unit_len[u]) for u in units_s]
+        ).astype(np.int64) if units_s.size else np.zeros(0, np.int64)
+        lrow = np.repeat(np.arange(units_s.size),
+                         unit_len[units_s]) if units_s.size \
             else np.zeros(0, np.int64)
-        n_virtual = rps - rows_s.size
+        n_virtual = rps - units_s.size
         needed.append(ent.size + n_virtual)
-        per_shard.append((rows_s, ent, lrow, n_virtual))
+        per_shard.append((units_s, ent, lrow, n_virtual))
     nnzb_ps = nnzb_per_shard or max(needed)
+    if (nnzb_per_shard is None and not split_heavy_rows and n_shards > 1):
+        # the derived budget is only honest when the heaviest block-row
+        # fits a balanced shard: one dominant row would silently inflate
+        # EVERY shard's padded budget to its size (the latent shard_bins
+        # edge) — refuse, and point at the split path that handles it
+        bal = -(-nnzb_g // n_shards) + rps
+        if nnzb_ps > 2 * bal and int(bpr.max(initial=0)) > bal:
+            raise ValueError(
+                f"heaviest block-row ({int(bpr.max())} blocks) exceeds "
+                f"the balanced per-shard budget ({bal}); the derived "
+                f"budget {nnzb_ps} would over-allocate every shard — "
+                "pass split_heavy_rows=True (entry-granular splits) or "
+                "pin nnzb_per_shard explicitly")
     too_big = [s for s in range(n_shards) if needed[s] > nnzb_ps]
     if too_big:
         raise ValueError(
@@ -246,11 +420,11 @@ def _prepare_sharded_host(a: bcsr_lib.BCSR, n_shards: int, *,
     t_rows = np.zeros((n_shards, nnzb_t_ps), np.int32)
     t_cols = np.zeros((n_shards, nnzb_t_ps), np.int32)
     metas = []
-    for s, (rows_s, ent, lrow, n_virtual) in enumerate(per_shard):
+    for s, (units_s, ent, lrow, n_virtual) in enumerate(per_shard):
         n_real = ent.size
         # one sentinel per virtual row keeps the nnz-stream kernel's
         # every-block-row-nonempty invariant; leftover budget pads row 0
-        vrows = np.arange(rows_s.size, rps)
+        vrows = np.arange(units_s.size, rps)
         l_rows = np.concatenate([
             lrow, vrows, np.zeros(nnzb_ps - n_real - n_virtual, np.int64)])
         l_cols = np.concatenate([
@@ -286,13 +460,28 @@ def _prepare_sharded_host(a: bcsr_lib.BCSR, n_shards: int, *,
             max_bpr=max_bpr, padding_ratio_pct=pad_pct, bpr_cv_pct=cv_pct,
             reorder="identity", n_shards=n_shards))
 
-    # original row -> stacked output row: pre-reorder, then partition slot
+    # original row -> stacked output row: pre-reorder, then partition slot.
+    # Each planning unit occupies one slot; a split block-row's PRIMARY
+    # fragment (entry offset 0) carries the row through the gather, the
+    # extras recombine via the split_src/split_dst scatter-add.
     inv_pre = permute_lib.invert_perm(pre_perm)
-    slot_of_br = np.empty(nbr, np.int64)
+    slot_of_unit = np.empty(max(unit_row.size, 1), np.int64)
     for s in range(n_shards):
-        slot_of_br[shard_rows[s]] = s * rps + np.arange(shard_rows[s].size)
+        us = shard_units[s]
+        slot_of_unit[us] = s * rps + np.arange(us.size)
+    primary = unit_start == 0
+    slot_of_br = np.empty(nbr, np.int64)
+    slot_of_br[unit_row[primary]] = slot_of_unit[: unit_row.size][primary]
     perm_rows = inv_pre                       # position after pre-reorder
     gather = slot_of_br[perm_rows // h] * h + perm_rows % h
+
+    extra = np.flatnonzero(~primary)
+    ar = np.arange(h, dtype=np.int64)
+    x_rows = (unit_row[extra][:, None] * h + ar).ravel()    # a_p row space
+    s_rows = (slot_of_unit[extra][:, None] * h + ar).ravel()
+    valid = x_rows < M          # last block-row's pad rows carry no data
+    split_src = s_rows[valid].astype(np.int64)
+    split_dst = pre_perm[x_rows[valid]].astype(np.int64)
 
     host = {
         "vals": a_p.vals,
@@ -304,24 +493,44 @@ def _prepare_sharded_host(a: bcsr_lib.BCSR, n_shards: int, *,
         "t_row_ids": t_rows,
         "t_col_ids": t_cols,
         "gather_rows": gather,
+        "split_src": split_src,
+        "split_dst": split_dst,
     }
     meta = ShardedMeta(shape=(M, K), block=(h, w), n_shards=n_shards,
                        col_shards=col_shards, rows_per_shard=rps,
                        nnzb=nnzb_g, nnzb_per_shard=nnzb_ps,
                        nnzb_t_per_shard=nnzb_t_ps, shard_metas=tuple(metas),
-                       reorder=reorder)
+                       reorder=reorder,
+                       n_split_fragments=int(extra.size))
     return host, meta
 
 
-def prepare_sharded(a: bcsr_lib.BCSR, n_shards: int, *,
+def resolve_n_shards(a: bcsr_lib.BCSR, *, n: int = 512, max_shards: int = 8,
+                     n_chunks: int = 2, tuner=None):
+    """Resolve ``n_shards="auto"`` for a host BCSR: the autotuner's
+    shard-count pick (``Autotuner.pick_shards`` — cache hit, else the
+    analytic pipeline model over {1, 2, 4, 8} capped at ``max_shards``)
+    evaluated on the operand's unsharded static meta.  Deterministic for
+    a fixed (structure, n, max_shards, n_chunks) and cached under the v7
+    ``shards|max=<M>|...|nk=<K>`` key.  Returns the ``ShardChoice``."""
+    from repro.kernels import autotune
+    meta = ops.prepare_sparse_meta(a)
+    t = tuner or autotune.get_autotuner()
+    return t.pick_shards(meta, n, max_shards=max_shards, n_chunks=n_chunks)
+
+
+def prepare_sharded(a: bcsr_lib.BCSR, n_shards, *,
                     col_shards: int = 1, dtype=jnp.bfloat16,
                     reorder: str = "identity", tau: float = 0.7,
                     max_candidates: Optional[int] = None,
                     rows_per_shard: Optional[int] = None,
-                    nnzb_per_shard: Optional[int] = None
+                    nnzb_per_shard: Optional[int] = None,
+                    split_heavy_rows: bool = False
                     ) -> Tuple[ShardedArrays, ShardedMeta]:
     """Host BCSR -> row-partitioned device arrays + static sharded meta.
 
+    ``n_shards`` is an int, or ``"auto"`` to resolve the shard count
+    through :func:`resolve_n_shards` (analytic pick, cache-backed).
     ``reorder`` optionally applies a block-row permutation scheme FIRST
     (``jaccard`` | ``rcm`` — densify, then balance); the partition itself
     is the ``shard_balance`` assignment, so passing ``"shard_balance"`` or
@@ -330,7 +539,9 @@ def prepare_sharded(a: bcsr_lib.BCSR, n_shards: int, *,
     path derives them from dims so scan-stacked layers agree); omitted,
     they are derived from the structure (tight fit).  Raises when the
     structure cannot fit the pinned budget — static shapes are a contract,
-    not a best effort.
+    not a best effort.  ``split_heavy_rows=True`` splits block-rows
+    heavier than the balanced budget into entry fragments (extreme
+    single-row skew; see module docstring).
 
     Example (4-way partition of a 320x256 operand, local execution):
 
@@ -347,7 +558,7 @@ def prepare_sharded(a: bcsr_lib.BCSR, n_shards: int, *,
     host, meta = _prepare_sharded_host(
         a, n_shards, col_shards=col_shards, reorder=reorder, tau=tau,
         max_candidates=max_candidates, rows_per_shard=rows_per_shard,
-        nnzb_per_shard=nnzb_per_shard)
+        nnzb_per_shard=nnzb_per_shard, split_heavy_rows=split_heavy_rows)
     arrays = ShardedArrays(
         vals=jnp.asarray(host["vals"], dtype=dtype),
         src_index=jnp.asarray(host["src_index"], jnp.int32),
@@ -358,16 +569,19 @@ def prepare_sharded(a: bcsr_lib.BCSR, n_shards: int, *,
         t_row_ids=jnp.asarray(host["t_row_ids"], jnp.int32),
         t_col_ids=jnp.asarray(host["t_col_ids"], jnp.int32),
         gather_rows=jnp.asarray(host["gather_rows"], jnp.int32),
+        split_src=jnp.asarray(host["split_src"], jnp.int32),
+        split_dst=jnp.asarray(host["split_dst"], jnp.int32),
     )
     return arrays, meta
 
 
-def prepare_sharded_meta(a: bcsr_lib.BCSR, n_shards: int, *,
+def prepare_sharded_meta(a: bcsr_lib.BCSR, n_shards, *,
                          col_shards: int = 1, reorder: str = "identity",
                          tau: float = 0.7,
                          max_candidates: Optional[int] = None,
                          rows_per_shard: Optional[int] = None,
-                         nnzb_per_shard: Optional[int] = None) -> ShardedMeta:
+                         nnzb_per_shard: Optional[int] = None,
+                         split_heavy_rows: bool = False) -> ShardedMeta:
     """The static ``ShardedMeta`` that ``prepare_sharded`` would return,
     WITHOUT building device arrays — bit-identical by construction (same
     host pipeline, dtype only affects the arrays).
@@ -381,15 +595,16 @@ def prepare_sharded_meta(a: bcsr_lib.BCSR, n_shards: int, *,
     return _prepare_sharded_host(
         a, n_shards, col_shards=col_shards, reorder=reorder, tau=tau,
         max_candidates=max_candidates, rows_per_shard=rows_per_shard,
-        nnzb_per_shard=nnzb_per_shard)[1]
+        nnzb_per_shard=nnzb_per_shard, split_heavy_rows=split_heavy_rows)[1]
 
 
-def prepare(a: bcsr_lib.BCSR, n_shards: int, *, meta_only: bool = False,
+def prepare(a: bcsr_lib.BCSR, n_shards, *, meta_only: bool = False,
             col_shards: int = 1, dtype=jnp.bfloat16,
             reorder: str = "identity", tau: float = 0.7,
             max_candidates: Optional[int] = None,
             rows_per_shard: Optional[int] = None,
-            nnzb_per_shard: Optional[int] = None):
+            nnzb_per_shard: Optional[int] = None,
+            split_heavy_rows: bool = False):
     """Unified entry point for the sharded prepare twins (PR 8).
 
     ``meta_only=False`` (default) delegates to :func:`prepare_sharded`
@@ -408,16 +623,28 @@ def prepare(a: bcsr_lib.BCSR, n_shards: int, *, meta_only: bool = False,
     """
     kw = dict(col_shards=col_shards, reorder=reorder, tau=tau,
               max_candidates=max_candidates, rows_per_shard=rows_per_shard,
-              nnzb_per_shard=nnzb_per_shard)
+              nnzb_per_shard=nnzb_per_shard, split_heavy_rows=split_heavy_rows)
     if meta_only:
         return prepare_sharded_meta(a, n_shards, **kw)
     return prepare_sharded(a, n_shards, dtype=dtype, **kw)
 
 
 # ---------------------------------------------------------------- execution
+def _combine_splits(out: jnp.ndarray, out_pad: jnp.ndarray,
+                    arrays: ShardedArrays) -> jnp.ndarray:
+    """Add non-primary row-fragment partial sums back into their original
+    rows (entry-granular splits).  No-op (same array) when the operand
+    was prepared without splits — the default path stays byte-identical
+    to the pre-split implementation."""
+    src = arrays.split_src
+    if src is None or int(src.shape[0]) == 0:
+        return out
+    return out.at[arrays.split_dst].add(jnp.take(out_pad, src, axis=0))
+
+
 def _resolve_shard_choices(smeta: ShardedMeta, n_local: int, backend: str,
                            bn: int) -> Tuple[Tuple[str, int], ...]:
-    """Per-shard (backend, bn): ``auto`` consults the v4 per-shard
+    """Per-shard (backend, bn): ``auto`` consults the v7 per-shard
     fingerprints, so a skewed shard can run ``row_loop`` while its uniform
     neighbors stream nonzeros — the per-structure choice the global
     dispatch could not make.  ``n_local`` is the panel width each shard
@@ -439,7 +666,7 @@ def _branch_meta(smeta: ShardedMeta, members) -> ops.SparseMeta:
 def spmm_sharded(arrays: ShardedArrays, smeta: ShardedMeta, b: jnp.ndarray,
                  *, backend: str = "auto", bn: int = 512,
                  interpret: bool = False, mesh=None,
-                 out_dtype=None) -> jnp.ndarray:
+                 out_dtype=None, n_chunks: int = 1) -> jnp.ndarray:
     """C = A @ B over the row-partitioned operand, original row order.
 
     ``mesh=None`` runs the identical per-shard schedule in-process (the
@@ -449,9 +676,21 @@ def spmm_sharded(arrays: ShardedArrays, smeta: ShardedMeta, b: jnp.ndarray,
     through the per-shard custom VJPs; partial dB contributions psum
     across row shards via the shard_map transpose.
 
-    ``backend="auto"`` resolves one (variant, bn) PER SHARD from the v4
+    ``backend="auto"`` resolves one (variant, bn) PER SHARD from the v7
     per-shard fingerprints; heterogeneous picks dispatch via ``lax.switch``
     on the mesh axis index.
+
+    ``n_chunks > 1`` pipelines the panel in ascending column chunks —
+    chunk k+1's operand staging is issued before chunk k's matmul
+    (``_run_chunked``).  Kernel picks are resolved at the FULL panel
+    width either way, so the chunked result is bit-identical to
+    ``n_chunks=1`` (per-column accumulation trees are unchanged).  The
+    backward pass runs the SINGLE-SHOT schedule regardless of
+    ``n_chunks`` (a ``custom_vjp`` over the chunked forward): chunking
+    the dvals contraction would split its column sum into a different
+    accumulation tree, and since the chunked primal is value-identical
+    to the unchunked one, the unchunked VJP is exactly its VJP — grads
+    stay bitwise-stable across every chunk depth.
 
     Example (in-process fallback, checked against the unsharded oracle):
 
@@ -469,6 +708,37 @@ def spmm_sharded(arrays: ShardedArrays, smeta: ShardedMeta, b: jnp.ndarray,
     ...                   atol=1e-4))
     True
     """
+    if n_chunks > 1:
+        kw = dict(backend=backend, bn=bn, interpret=interpret, mesh=mesh,
+                  out_dtype=out_dtype)
+
+        @jax.custom_vjp
+        def call(arrs, bb):
+            return _spmm_sharded_exec(arrs, smeta, bb, n_chunks=n_chunks,
+                                      **kw)
+
+        def fwd(arrs, bb):
+            return (_spmm_sharded_exec(arrs, smeta, bb, n_chunks=n_chunks,
+                                       **kw), (arrs, bb))
+
+        def bwd(res, g):
+            arrs, bb = res
+            _, vjp = jax.vjp(
+                lambda a_, b_: _spmm_sharded_exec(a_, smeta, b_, n_chunks=1,
+                                                  **kw), arrs, bb)
+            return vjp(g)
+
+        call.defvjp(fwd, bwd)
+        return call(arrays, b)
+    return _spmm_sharded_exec(arrays, smeta, b, backend=backend, bn=bn,
+                              interpret=interpret, mesh=mesh,
+                              out_dtype=out_dtype, n_chunks=n_chunks)
+
+
+def _spmm_sharded_exec(arrays: ShardedArrays, smeta: ShardedMeta,
+                       b: jnp.ndarray, *, backend: str, bn: int,
+                       interpret: bool, mesh, out_dtype,
+                       n_chunks: int) -> jnp.ndarray:
     M, K = smeta.shape
     N = int(b.shape[-1])
     S = smeta.n_shards
@@ -478,21 +748,28 @@ def spmm_sharded(arrays: ShardedArrays, smeta: ShardedMeta, b: jnp.ndarray,
 
     if mesh is None:
         # local mode multiplies the FULL panel per shard — resolve picks
-        # for N, not N / col_shards
+        # for N, not N / col_shards (and never for a chunk's width: the
+        # pick must not depend on n_chunks or bitwise identity breaks)
         choices = _resolve_shard_choices(smeta, N, backend, bn)
-        outs = []
-        for s in range(S):
-            arr = ops.SparseArrays(
-                jnp.take(vals_ext, arrays.src_index[s], axis=0),
-                arrays.row_ids[s], arrays.col_ids[s],
-                arrays.real_mask[s], arrays.t_perm[s], arrays.t_row_ids[s],
-                arrays.t_col_ids[s])
-            be, bn_s = choices[s]
-            outs.append(ops.spmm(arr, smeta.shard_metas[s], b, backend=be,
-                                 bn=bn_s, interpret=interpret,
-                                 out_dtype=out_dtype))
-        out_pad = jnp.concatenate(outs, axis=0)
-        return jnp.take(out_pad, arrays.gather_rows, axis=0)
+        arrs = [ops.SparseArrays(
+            jnp.take(vals_ext, arrays.src_index[s], axis=0),
+            arrays.row_ids[s], arrays.col_ids[s],
+            arrays.real_mask[s], arrays.t_perm[s], arrays.t_row_ids[s],
+            arrays.t_col_ids[s]) for s in range(S)]
+
+        def run_all(bc):
+            outs = []
+            for s in range(S):
+                be, bn_s = choices[s]
+                outs.append(ops.spmm(arrs[s], smeta.shard_metas[s], bc,
+                                     backend=be, bn=bn_s,
+                                     interpret=interpret,
+                                     out_dtype=out_dtype))
+            return jnp.concatenate(outs, axis=0)
+
+        out_pad = _run_chunked(run_all, b, n_chunks)
+        out = jnp.take(out_pad, arrays.gather_rows, axis=0)
+        return _combine_splits(out, out_pad, arrays)
 
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     if axis_sizes.get(AXIS_ROW) != S:
@@ -522,8 +799,11 @@ def spmm_sharded(arrays: ShardedArrays, smeta: ShardedMeta, b: jnp.ndarray,
 
         def run(sv, ri, ci, rm, tp, tr, tc, bloc):
             arr = ops.SparseArrays(sv, ri, ci, rm, tp, tr, tc)
-            return ops.spmm(arr, meta_k, bloc, backend=be, bn=bn_k,
-                            interpret=interpret, out_dtype=out_dtype)
+
+            def one(bc):
+                return ops.spmm(arr, meta_k, bc, backend=be, bn=bn_k,
+                                interpret=interpret, out_dtype=out_dtype)
+            return _run_chunked(one, bloc, n_chunks)
         return run
 
     def body(ve, si, ri, ci, rm, tp, tr, tc, bloc):
@@ -551,7 +831,9 @@ def spmm_sharded(arrays: ShardedArrays, smeta: ShardedMeta, b: jnp.ndarray,
     # padding rows are dropped by the gather; its transpose scatters exact
     # zeros back into them, so grads match the unsharded path bit-for-bit
     # on the real support
-    return jnp.take(out_pad, arrays.gather_rows, axis=0)[:, :N]
+    out = jnp.take(out_pad, arrays.gather_rows, axis=0)
+    out = _combine_splits(out, out_pad, arrays)
+    return out[:, :N]
 
 
 # ------------------------------------------------------------------- tuning
@@ -560,7 +842,7 @@ def tune_shards(arrays: ShardedArrays, smeta: ShardedMeta, n: int, *,
                 rng_seed: int = 0, tuner=None) -> dict:
     """Timed per-shard micro-sweep (the sharded analogue of
     ``Autotuner.tune``): times every registered candidate on each shard's
-    LOCAL slice and caches the winner under the shard's v4 fingerprint,
+    LOCAL slice and caches the winner under the shard's v7 fingerprint,
     so later ``backend="auto"`` dispatch picks measured winners per shard.
     Shards whose fingerprints coincide (well-balanced partitions — the
     common case) are timed once.  Returns {fingerprint_key: choice}."""
@@ -626,6 +908,62 @@ def tune_shards(arrays: ShardedArrays, smeta: ShardedMeta, n: int, *,
         tuner.put(fp, choice, persist=True)
         tuned[fp.key()] = choice
     return tuned
+
+
+def tune_shard_count(a: bcsr_lib.BCSR, n: int, *, max_shards: int = 8,
+                     n_chunks: int = 1, backend: str = "auto", bn: int = 512,
+                     interpret: bool = True, warmup: int = 1, iters: int = 3,
+                     rng_seed: int = 0, tuner=None):
+    """Timed shard-count micro-sweep: the measured counterpart of
+    :func:`resolve_n_shards` (the optional half of the autotune axis —
+    the analytic pick never blocks on it).  Prepares the operand at each
+    candidate S, times the end-to-end local ``spmm_sharded`` with the
+    requested chunk depth, and caches the winner in the autotuner's
+    shard-entry section under the operand's v7 ``nk=`` fingerprint so
+    later ``resolve_n_shards`` calls return the measured choice.  Smaller
+    S wins ties (within 2% — partition overhead noise).  Returns the
+    ``ShardChoice``."""
+    import time
+
+    from repro.kernels import autotune
+    tuner = tuner or autotune.get_autotuner()
+    meta = ops.prepare_sparse_meta(a)
+    fp = autotune.fingerprint(meta, n, n_chunks=n_chunks)
+    rng = np.random.default_rng(rng_seed)
+    b = jnp.asarray(rng.standard_normal((a.shape[1], n)), jnp.float32)
+
+    timings = {}
+    for s in autotune.shard_candidates(max_shards, meta.n_block_rows):
+        try:
+            sharr, smeta = prepare_sharded(a, s, dtype=jnp.float32)
+        except ValueError:      # unfittable at this S — not a candidate
+            continue
+        fn = jax.jit(lambda bb, _a=sharr, _m=smeta: spmm_sharded(
+            _a, _m, bb, backend=backend, bn=bn, interpret=interpret,
+            n_chunks=n_chunks))
+        try:
+            jax.block_until_ready(fn(b))
+            for _ in range(max(warmup - 1, 0)):
+                jax.block_until_ready(fn(b))
+            ts = []
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(b))
+                ts.append(time.perf_counter() - t0)
+            timings[s] = float(np.median(ts))
+        except Exception:       # candidate not runnable here — skip
+            continue
+    if not timings:
+        choice = autotune.analytic_shard_choice(
+            meta, n, max_shards=max_shards, n_chunks=n_chunks)
+    else:
+        t_best = min(timings.values())
+        best = next(s for s in sorted(timings)
+                    if timings[s] <= t_best * 1.02)
+        choice = autotune.ShardChoice(best, source="measured",
+                                      predicted_us=timings[best] * 1e6)
+    tuner.put_shards(fp, max_shards, choice, persist=True)
+    return choice
 
 
 # ---------------------------------------------------------------- reporting

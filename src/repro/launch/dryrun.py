@@ -222,12 +222,16 @@ def sparse_shard_report(cfg, n_tokens: int = 512) -> dict:
     The picks come from the SAME static metas the model path dispatches
     on (``models.layers.mlp_sparse_metas`` — true per-shard structure
     stats merged over the layer stack), resolved as ``backend="auto"``
-    for an ``n_tokens``-wide activation panel."""
+    for an ``n_tokens``-wide activation panel.  ``shards="auto"`` specs
+    additionally report the RESOLVED shard count per weight (the
+    autotuner's shard-count pick) and every report carries the overlap
+    chunk schedule the apply will pipeline the token panel with."""
     spec = cfg.ffn_sparsity
-    if spec is None or getattr(spec, "shards", 0) < 1:
-        return {}
     from repro.core import sparse_linear as sl
+    if spec is None or not sl.is_sharded(spec):
+        return {}
     from repro.kernels import ops as kops
+    from repro.launch import dist_spmm
     from repro.models import layers as L
     from repro.models.transformer import _mlp_seed_hints
     # balance and picks must describe the SAME structures: use the real
@@ -240,6 +244,14 @@ def sparse_shard_report(cfg, n_tokens: int = 512) -> dict:
         "down": sl.shard_balance_report(cfg.d_ff, cfg.d_model, spec,
                                         seed=seed0 + 2),
     }
+    n_chunks = max(spec.shard_chunks, 1)
+    for lname, (od, idim) in (("gate_up", (cfg.d_ff, cfg.d_model)),
+                              ("down", (cfg.d_model, cfg.d_ff))):
+        rep[lname]["resolved_shards"] = sl.resolved_shards(spec, od, idim)
+        rep[lname]["shards_auto"] = spec.shards == "auto"
+        rep[lname]["n_chunks"] = n_chunks
+        rep[lname]["chunk_schedule"] = [
+            list(c) for c in dist_spmm.chunk_schedule(n_tokens, n_chunks)]
     meta_in, meta_out = L.mlp_sparse_metas(
         spec, cfg.d_model, cfg.d_ff, _mlp_seed_hints(cfg))
     from repro.analysis import verify_launch as vl

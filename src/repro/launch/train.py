@@ -48,7 +48,8 @@ def main(argv=None):
     cfg = get_config(args.arch)
     shape = ShapeCell("cli", "train", args.seq, args.batch)
 
-    if cfg.ffn_sparsity is not None and cfg.ffn_sparsity.shards > 0:
+    from repro.core.sparse_linear import is_sharded
+    if cfg.ffn_sparsity is not None and is_sharded(cfg.ffn_sparsity):
         # partitioned sparse FFN: surface the per-shard balance and the
         # autotune picks the model path will dispatch with (the static
         # metas mlp() derives — the same ones the train step traces against)

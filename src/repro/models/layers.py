@@ -3,6 +3,13 @@ logit softcap, QKV bias, or block-sparse scores on a static BCSR mask —
 ``cfg.attn_sparsity``), MLA (DeepSeek), gated MLP (dense or block-sparse —
 the paper's technique as a drop-in FFN).
 
+Sparse-FFN layers inherit the full ``SparsitySpec`` surface through
+``apply_sparse_linear`` — including ``shards="auto"`` (shard count
+resolved per layer from dims alone, so scan-stacked layers keep shared
+leaf shapes) and ``shard_chunks`` (the communication-overlap pipeline
+depth; chunked dispatch is bit-identical to unchunked, so it is safe by
+default).
+
 Conventions:
   * params are nested dicts of jnp arrays; init fns take (cfg, key).
   * activations are [B, L, D]; caches are dicts of ring buffers written at

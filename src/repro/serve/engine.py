@@ -26,7 +26,12 @@ token-for-token identical streams (pinned in
 
 Every decode step is the SAME jitted ``_masked_step`` regardless of how
 many slots are active or at which positions — slot masks keep shapes
-static, so the scheduler never causes a retrace.
+static, so the scheduler never causes a retrace.  That includes sharded
+sparse FFNs: ``cfg.ffn_sparsity`` may carry ``shards="auto"`` /
+``shard_chunks`` — the shard count resolves statically from the layer
+dims (same leaf shapes every trace) and the overlap-chunked SpMM is
+bit-identical to the unchunked one, so the pinned token streams in
+``tests/test_serving.py`` are unaffected.
 """
 from __future__ import annotations
 

@@ -332,6 +332,33 @@ class TestVerifier:
         errs = vl.verify_launch(meta, "row_loop", n=512, vmem_budget=1024)
         assert errs and any("VMEM" in e for e in errs)
 
+    def test_chunk_schedule_invariants(self):
+        """Overlap schedules: every builder output passes; every corrupted
+        schedule (gap, overlap, empty chunk, wrong span) is caught."""
+        from repro.launch.dist_spmm import chunk_schedule
+        for n in (1, 7, 64, 512):
+            for k in (1, 2, 4, 8):
+                assert vl.verify_chunk_schedule(
+                    chunk_schedule(n, k), n, block=(16, 16)) == []
+        # overlap: column range accumulated twice -> not bit-identical
+        errs = vl.verify_chunk_schedule([(0, 3), (2, 6), (6, 10)], 10)
+        assert errs and "overlap" in errs[0]
+        # gap: columns dropped from the output panel
+        errs = vl.verify_chunk_schedule([(0, 3), (4, 10)], 10)
+        assert errs and "gap" in errs[0]
+        # empty / descending chunk
+        assert vl.verify_chunk_schedule([(0, 6), (6, 6), (6, 10)], 10)
+        assert vl.verify_chunk_schedule([(0, 8), (8, 7)], 10)
+        # wrong span at either end
+        errs = vl.verify_chunk_schedule([(1, 6), (6, 9)], 10)
+        assert len(errs) == 2
+        assert vl.verify_chunk_schedule([], 10)
+        assert vl.verify_chunk_schedule("nope", 10)
+        # per-chunk VMEM gate fires under a tiny budget
+        errs = vl.verify_chunk_schedule(
+            chunk_schedule(512, 4), 512, block=(16, 16), vmem_budget=1024)
+        assert errs and all("VMEM" in e for e in errs)
+
     def test_resolve_backend_hook(self, monkeypatch):
         a, meta = _rand_case()
         monkeypatch.setenv("REPRO_VERIFY_LAUNCH", "1")
@@ -406,11 +433,14 @@ class TestFingerprintAudit:
         with pytest.raises(fpa.StaleKeyError) as ei:
             fpa.parse_key(stale)
         msg = str(ei.value)
-        assert "v5" in msg and "v6" in msg and "refresh" in msg
+        assert "v5" in msg and "v7" in msg and "refresh" in msg
+        # the immediately-previous grammar (no nk= field) is stale too
+        with pytest.raises(fpa.StaleKeyError):
+            fpa.parse_key("v6" + fp.key()[2:].rsplit("|nk=", 1)[0])
 
     def test_malformed_key_rejected(self):
         with pytest.raises(ValueError):
-            fpa.parse_key("v6|op=spmm|nbr=oops")
+            fpa.parse_key("v7|op=spmm|nbr=oops")
         with pytest.raises(ValueError):
             fpa.parse_key("not a key at all")
 

@@ -130,23 +130,23 @@ def test_fused_gradients_match_composed(mask_kind):
         assert float(jnp.abs(a).sum()) > 0
 
 
-# ================================================= v6 fingerprints + dispatch
+# ================================================= v7 fingerprints + dispatch
 def test_v6_attn_key_pinned_and_never_aliases():
-    """The v6 ``op=attn`` key layout is a cross-process cache contract,
+    """The v7 ``op=attn`` key layout is a cross-process cache contract,
     and fused/composed picks live in a key space disjoint from the
     composed path's sddmm/spmm picks over the SAME structure."""
     fp = autotune.Fingerprint(
         n_block_rows=4, n_block_cols=5, block=(16, 16), nnzb=10,
         pad_bucket=1, skew_bucket=2, n_bucket=64, reorder="jaccard",
         n_shards=2, max_bpr=3, op="attn")
-    assert fp.key() == ("v6|op=attn|nbr=4|nbc=5|b=16x16|nnzb=10|pad=1"
-                        "|skew=2|n=64|ro=jaccard|ns=2|mb=3")
+    assert fp.key() == ("v7|op=attn|nbr=4|nbc=5|b=16x16|nnzb=10|pad=1"
+                        "|skew=2|n=64|ro=jaccard|ns=2|mb=3|nk=1")
 
     meta = A.attention_mask_meta(A.banded(24), 64, (8, 8))
     keys = {op: autotune.fingerprint(meta, 8, op=op).key()
             for op in ("attn", "sddmm", "spmm")}
     assert len(set(keys.values())) == 3
-    assert keys["attn"].startswith("v6|op=attn|")
+    assert keys["attn"].startswith("v7|op=attn|")
     # a cached attn pick is invisible to the composed families
     tuner = autotune.get_autotuner()
     tuner.put(autotune.fingerprint(meta, 8, op="attn"),

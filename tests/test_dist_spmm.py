@@ -3,9 +3,12 @@
 Equivalence vs the single-device reference across shard counts {1, 2, 4, 8}
 — forward within dtype tolerance and the VJP (dvals on the real support,
 dB) — including ragged block-row counts, a partial trailing block-row, and
-empty shards; plus the shard_bins occupancy invariants, the v6 autotune
+empty shards; plus the overlap chunk pipeline (bit-identical across chunk
+depths, local and shard_map), the heavy-row guard and entry-granular
+splits, the shard-count autotune axis (``resolve_n_shards`` determinism +
+cache round-trip), the shard_bins occupancy invariants, the v7 autotune
 fingerprint, the mixed-variant lax.switch path, and the model wiring
-(``SparsitySpec(shards=...)``).
+(``SparsitySpec(shards=...)`` including ``shards="auto"``).
 
 shard_map cases need real devices: run under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
@@ -160,19 +163,23 @@ def test_pre_reorder_composes_with_partition():
                                rtol=1e-5, atol=1e-4)
 
 
-# ----------------------------------------------------- fingerprint (v6)
+# ----------------------------------------------------- fingerprint (v7)
 def test_fingerprint_shard_count_no_alias():
     a = bcsr_lib.random_bcsr(0, (256, 256), (16, 16), 0.2)
     _, meta = ops.prepare_sparse(a, dtype=jnp.float32)
     sharr, smeta = dist_spmm.prepare_sharded(a, 4, dtype=jnp.float32)
     k_full = autotune.fingerprint(meta, 64).key()
     k_shard = autotune.fingerprint(smeta.shard_metas[0], 64).key()
-    assert k_full.startswith("v6|") and k_shard.startswith("v6|")
+    assert k_full.startswith("v7|") and k_shard.startswith("v7|")
     assert "ns=1" in k_full and "ns=4" in k_shard
     # the key carries the row_loop schedule bound (v4 field) — real stats
     # on both sides
     assert f"mb={meta.max_bpr}" in k_full and meta.max_bpr > 0
     assert k_full != k_shard
+    # v7: the chunk-depth field keys shard-count decisions; default nk=1
+    assert k_full.endswith("|nk=1")
+    k_chunked = autotune.fingerprint(meta, 64, n_chunks=4).key()
+    assert k_chunked.endswith("|nk=4") and k_chunked != k_full
 
 
 def test_tune_shards_caches_measured_picks():
@@ -309,6 +316,223 @@ def test_mixed_variant_switch_dispatch():
                                rtol=1e-5, atol=1e-4)
 
 
+# --------------------------------------------- overlap chunking (pipeline)
+def test_chunk_schedule_contract():
+    """The schedule partitions [0, n) exactly; depth clamps to n."""
+    assert dist_spmm.chunk_schedule(10, 4) == ((0, 3), (3, 6), (6, 9),
+                                               (9, 10))
+    assert dist_spmm.chunk_schedule(8, 1) == ((0, 8),)
+    assert dist_spmm.chunk_schedule(2, 8) == ((0, 1), (1, 2))
+    with pytest.raises(ValueError):
+        dist_spmm.chunk_schedule(0, 2)
+    with pytest.raises(ValueError):
+        dist_spmm.chunk_schedule(8, 0)
+
+
+@pytest.mark.parametrize("n_chunks", (2, 4))
+def test_chunked_local_bitwise(n_chunks):
+    """Chunked dispatch concatenates disjoint column panels: the result is
+    BIT-identical to the unchunked run (the overlap contract)."""
+    for name, a in _cases():
+        b = _b_for(a)
+        sharr, smeta = dist_spmm.prepare_sharded(a, 4, dtype=jnp.float32)
+        base = np.asarray(dist_spmm.spmm_sharded(sharr, smeta, b,
+                                                 backend="xla"))
+        out = np.asarray(dist_spmm.spmm_sharded(sharr, smeta, b,
+                                                backend="xla",
+                                                n_chunks=n_chunks))
+        assert np.array_equal(out.view(np.uint32), base.view(np.uint32)), \
+            f"{name}: nk={n_chunks} diverged from unchunked"
+
+
+@pytest.mark.parametrize("n_chunks", (2, 4))
+def test_chunked_shard_map_bitwise(n_chunks):
+    """Under a real mesh the staged all-gather pipeline must still emit
+    the exact unchunked bits."""
+    mesh = _mesh_or_skip(4)
+    a = bcsr_lib.from_scipy(topology.power_law(500, 5.0, seed=2), (16, 16))
+    b = _b_for(a)
+    sharr, smeta = dist_spmm.prepare_sharded(a, 4, dtype=jnp.float32)
+    base = np.asarray(dist_spmm.spmm_sharded(sharr, smeta, b,
+                                             backend="xla", mesh=mesh))
+    out = np.asarray(jax.jit(lambda bb: dist_spmm.spmm_sharded(
+        sharr, smeta, bb, backend="xla", mesh=mesh,
+        n_chunks=n_chunks))(b))
+    assert np.array_equal(out.view(np.uint32), base.view(np.uint32))
+
+
+def test_chunked_grads_route_through_unchunked_exec():
+    """The chunked forward's custom VJP differentiates the unchunked exec:
+    grads are bit-identical across chunk depths."""
+    a = bcsr_lib.from_scipy(topology.power_law(300, 5.0, seed=2), (16, 16))
+    b = _b_for(a)
+    sharr, smeta = dist_spmm.prepare_sharded(a, 2, dtype=jnp.float32)
+
+    def grads(k):
+        def loss(v, bb):
+            out = dist_spmm.spmm_sharded(sharr._replace(vals=v), smeta,
+                                         bb, backend="xla", n_chunks=k)
+            return jnp.sum(out ** 2)
+        return jax.grad(loss, argnums=(0, 1))(sharr.vals, b)
+
+    gv1, gb1 = grads(1)
+    for k in (2, 4):
+        gvk, gbk = grads(k)
+        assert np.array_equal(np.asarray(gvk).view(np.uint32),
+                              np.asarray(gv1).view(np.uint32))
+        assert np.array_equal(np.asarray(gbk).view(np.uint32),
+                              np.asarray(gb1).view(np.uint32))
+
+
+# --------------------------------------- heavy rows: guard + entry splits
+def _heavy_row_case():
+    """One 64-block row towering over 3 single-block rows: under S=4 the
+    balanced budget is ~18 blocks, so the heavy row alone blows it 3x."""
+    dense = np.zeros((64, 1024), np.float32)
+    rng = np.random.default_rng(0)
+    dense[:16, :] = rng.standard_normal((16, 1024))
+    for r in range(1, 4):
+        dense[16 * r, 16 * r] = 1.0
+    return bcsr_lib.from_dense(dense, (16, 16))
+
+
+def test_heavy_row_overflow_raises():
+    """Regression for the silent over-allocation: a block-row heavier than
+    2x the balanced per-shard budget must raise, not quietly serialize."""
+    a = _heavy_row_case()
+    with pytest.raises(ValueError, match="heaviest block-row"):
+        dist_spmm.prepare_sharded(a, 4, dtype=jnp.float32)
+
+
+def test_split_heavy_rows_restores_balance():
+    """split_heavy_rows=True fragments the heavy row across shards and the
+    scatter-add combine reproduces the reference (allclose: the row's
+    partial sums now accumulate across fragments)."""
+    a = _heavy_row_case()
+    b = _b_for(a)
+    _, _, ref = _ref(a, b)
+    sharr, smeta = dist_spmm.prepare_sharded(a, 4, dtype=jnp.float32,
+                                             split_heavy_rows=True)
+    assert smeta.n_split_fragments > 0
+    assert sharr.split_src is not None and sharr.split_src.shape[0] > 0
+    loads = [m.nnzb for m in smeta.shard_metas]
+    assert max(loads) <= 2 * (-(-a.nnzb // 4) + smeta.rows_per_shard)
+    for k in (1, 2, 4):
+        out = dist_spmm.spmm_sharded(sharr, smeta, b, backend="xla",
+                                     n_chunks=k)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4, err_msg=f"nk={k}")
+
+
+def test_split_heavy_rows_vjp_matches_reference():
+    a = _heavy_row_case()
+    b = _b_for(a)
+    arrays, meta, _ = _ref(a, b)
+    sharr, smeta = dist_spmm.prepare_sharded(a, 4, dtype=jnp.float32,
+                                             split_heavy_rows=True)
+
+    def loss_sh(v, bb):
+        out = dist_spmm.spmm_sharded(sharr._replace(vals=v), smeta, bb,
+                                     backend="xla")
+        return jnp.sum(out ** 2)
+
+    def loss_ref(v, bb):
+        arr = ops.SparseArrays(v, *arrays[1:])
+        return jnp.sum(ops.spmm(arr, meta, bb, backend="xla") ** 2)
+
+    gv, gb = jax.grad(loss_sh, argnums=(0, 1))(sharr.vals, b)
+    rv, rb = jax.grad(loss_ref, argnums=(0, 1))(arrays.vals, b)
+    np.testing.assert_allclose(np.asarray(gv), np.asarray(rv),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(rb),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_split_heavy_rows_needs_derived_budget():
+    """Entry splits re-derive per-shard budgets; a pinned nnzb_per_shard
+    (the scan-stacking contract) cannot host fragments."""
+    a = _heavy_row_case()
+    with pytest.raises(ValueError, match="split_heavy_rows"):
+        dist_spmm.prepare_sharded(a, 4, nnzb_per_shard=80,
+                                  split_heavy_rows=True)
+
+
+# ----------------------------------------- shard-count autotune (S="auto")
+def test_resolve_n_shards_deterministic_and_structure_dependent():
+    """Same structure -> same S (twice in-process); the skewed structure
+    shards, the small uniform one does not (acceptance invariant)."""
+    skew = bcsr_lib.from_scipy(topology.power_law(512, 5.0, seed=2),
+                               (16, 16))
+    uni = bcsr_lib.random_bcsr(0, (512, 256), (16, 16), 0.15)
+    c1 = dist_spmm.resolve_n_shards(skew, n=64, max_shards=8, n_chunks=2)
+    c2 = dist_spmm.resolve_n_shards(skew, n=64, max_shards=8, n_chunks=2)
+    assert (c1.n_shards, c1.source) == (c2.n_shards, c2.source)
+    assert c1.n_shards > 1
+    assert dist_spmm.resolve_n_shards(uni, n=64, max_shards=8,
+                                      n_chunks=2).n_shards == 1
+
+
+def test_resolve_n_shards_deterministic_across_processes(tmp_path):
+    """A subprocess building the same structure resolves the same S, and
+    the decision round-trips through the REPRO_AUTOTUNE_CACHE JSON."""
+    import json
+    import os
+    import subprocess
+    import sys
+    cache = tmp_path / "tune.json"
+    prog = (
+        "import numpy as np, jax.numpy as jnp\n"
+        "from repro.core import bcsr as bcsr_lib, topology\n"
+        "from repro.kernels import autotune, ops\n"
+        "from repro.launch import dist_spmm\n"
+        "a = bcsr_lib.from_scipy(topology.power_law(512, 5.0, seed=2),"
+        " (16, 16))\n"
+        "t = autotune.Autotuner()\n"
+        "c = dist_spmm.resolve_n_shards(a, n=64, max_shards=8,"
+        " n_chunks=2, tuner=t)\n"
+        "fp = autotune.fingerprint(ops.prepare_sparse_meta(a), 64,"
+        " n_chunks=2)\n"
+        "t.put_shards(fp, 8, c, persist=True)\n"
+        "print(c.n_shards, autotune.shard_entry_key(fp, 8))\n")
+    env = {**os.environ, "REPRO_AUTOTUNE_CACHE": str(cache),
+           "PYTHONPATH": os.pathsep.join(
+               [p for p in sys.path if p.endswith("src")] +
+               [os.environ.get("PYTHONPATH", "")])}
+    outs = [subprocess.run([sys.executable, "-c", prog], env=env,
+                           capture_output=True, text=True, check=True)
+            .stdout.split() for _ in range(2)]
+    assert outs[0] == outs[1]
+    s_sub, key = int(outs[0][0]), outs[0][1]
+    here = dist_spmm.resolve_n_shards(
+        bcsr_lib.from_scipy(topology.power_law(512, 5.0, seed=2), (16, 16)),
+        n=64, max_shards=8, n_chunks=2, tuner=autotune.Autotuner())
+    assert here.n_shards == s_sub
+    # the persisted JSON loads back into a fresh tuner with the same pick
+    data = json.loads(cache.read_text())
+    assert key in data.get("shard_entries", {})
+    fresh = autotune.Autotuner(cache_path=str(cache))
+    a = bcsr_lib.from_scipy(topology.power_law(512, 5.0, seed=2), (16, 16))
+    fp = autotune.fingerprint(ops.prepare_sparse_meta(a), 64, n_chunks=2)
+    hit = fresh.get_shards(fp, 8)
+    assert hit is not None and hit.n_shards == s_sub
+
+
+def test_shard_key_chunk_depth_no_alias():
+    """nk=1 and nk=2 shard decisions live under different cache keys: a
+    deeper pipeline may justify a larger S (collective amortized)."""
+    a = bcsr_lib.from_scipy(topology.power_law(512, 5.0, seed=2), (16, 16))
+    meta = ops.prepare_sparse_meta(a)
+    k1 = autotune.shard_entry_key(autotune.fingerprint(meta, 64), 8)
+    k2 = autotune.shard_entry_key(
+        autotune.fingerprint(meta, 64, n_chunks=2), 8)
+    assert k1 != k2 and k1.startswith("shards|max=8|v7|")
+    tuner = autotune.Autotuner()
+    tuner.put_shards(autotune.fingerprint(meta, 64), 8,
+                     autotune.ShardChoice(1), persist=False)
+    assert tuner.get_shards(
+        autotune.fingerprint(meta, 64, n_chunks=2), 8) is None
+
+
 # ------------------------------------------------------------- model wiring
 def _specs(shards=0):
     base = dict(density=0.3, block=(16, 16), backend="xla")
@@ -368,6 +592,35 @@ def test_sparse_linear_sharded_under_mesh():
                      )(pS, x)
     np.testing.assert_allclose(np.asarray(yS), np.asarray(y0),
                                rtol=1e-5, atol=1e-4)
+
+
+def test_sparse_linear_auto_shards_resolves_statically():
+    """shards="auto": the resolved S is a pure function of (dims, spec) —
+    specs, init, and re-derivation agree; apply matches the unsharded
+    path bit-for-bit at the default chunk depth."""
+    from repro.core import sparse_linear as sl
+    spec0, _ = _specs()
+    specA = dataclasses.replace(spec0, shards="auto")
+    d, f = 96, 160
+    assert sl.is_sharded(specA) and not sl.is_sharded(spec0)
+    s1 = sl.resolved_shards(specA, f, d)
+    assert s1 == sl.resolved_shards(specA, f, d) and s1 >= 1
+    ps_specs, _ = sparse_linear_specs(d, f, specA, dtype=jnp.float32)
+    for seed in (11, 12):
+        pA, mA = init_sparse_linear(seed, d, f, specA, dtype=jnp.float32)
+        for k in pA:
+            assert ps_specs[k].shape == pA[k].shape, k
+    p0, m0 = init_sparse_linear(11, d, f, spec0, dtype=jnp.float32)
+    pA, mA = init_sparse_linear(11, d, f, specA, dtype=jnp.float32)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (2, 5, d)).astype(np.float32))
+    y0 = np.asarray(apply_sparse_linear(p0, m0, x, spec0))
+    yA = np.asarray(apply_sparse_linear(pA, mA, x, specA))
+    np.testing.assert_allclose(yA, y0, rtol=1e-5, atol=1e-4)
+    # chunk depth is spec-controlled and value-preserving
+    spec1 = dataclasses.replace(specA, shard_chunks=1)
+    y1 = np.asarray(apply_sparse_linear(pA, mA, x, spec1))
+    assert np.array_equal(yA.view(np.uint32), y1.view(np.uint32))
 
 
 def test_model_mlp_sharded_matches_dense_path():

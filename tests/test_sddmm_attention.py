@@ -1,7 +1,7 @@
 """The SDDMM + block-sparse attention subsystem (PR 5).
 
 Covers: the public ``ops.sddmm`` (forward/VJP parity vs the dense masked
-reference across backends, reorder transparency), the v6 ``op=``
+reference across backends, reorder transparency), the v7 ``op=``
 fingerprint contract (SpMM and SDDMM picks never alias — pinned exactly),
 the mask builders, ``block_sparse_attention`` forward/backward vs the
 dense-masked oracle across backends and mask specs, the ``dist_spmm`` row
@@ -146,18 +146,19 @@ def test_spmm_sddmm_mutual_duals_second_order():
                                rtol=1e-3, atol=1e-3)
 
 
-# ======================================================= v6 fingerprint pins
+# ======================================================= v7 fingerprint pins
 def test_v6_key_format_pinned():
-    """The exact v6 key layout — a cross-process cache contract."""
+    """The exact v7 key layout — a cross-process cache contract."""
     fp = autotune.Fingerprint(
         n_block_rows=4, n_block_cols=5, block=(16, 16), nnzb=10,
         pad_bucket=1, skew_bucket=2, n_bucket=64, reorder="jaccard",
         n_shards=2, max_bpr=3, op="sddmm")
-    assert fp.key() == ("v6|op=sddmm|nbr=4|nbc=5|b=16x16|nnzb=10|pad=1"
-                        "|skew=2|n=64|ro=jaccard|ns=2|mb=3")
+    assert fp.key() == ("v7|op=sddmm|nbr=4|nbc=5|b=16x16|nnzb=10|pad=1"
+                        "|skew=2|n=64|ro=jaccard|ns=2|mb=3|nk=1")
     assert dataclasses.replace(fp, op="spmm").key() == (
-        "v6|op=spmm|nbr=4|nbc=5|b=16x16|nnzb=10|pad=1"
-        "|skew=2|n=64|ro=jaccard|ns=2|mb=3")
+        "v7|op=spmm|nbr=4|nbc=5|b=16x16|nnzb=10|pad=1"
+        "|skew=2|n=64|ro=jaccard|ns=2|mb=3|nk=1")
+    assert dataclasses.replace(fp, n_chunks=4).key().endswith("|nk=4")
 
 
 def test_spmm_and_sddmm_keys_never_alias():
@@ -166,8 +167,8 @@ def test_spmm_and_sddmm_keys_never_alias():
     fp_spmm = autotune.fingerprint(meta, 64)
     fp_sddmm = autotune.fingerprint(meta, 64, op="sddmm")
     assert fp_spmm.key() != fp_sddmm.key()
-    assert fp_spmm.key().startswith("v6|op=spmm|")
-    assert fp_sddmm.key().startswith("v6|op=sddmm|")
+    assert fp_spmm.key().startswith("v7|op=spmm|")
+    assert fp_sddmm.key().startswith("v7|op=sddmm|")
     # a cached pick for one family is invisible to the other
     tuner = autotune.get_autotuner()
     tuner.put(fp_spmm, autotune.KernelChoice("xla", 512), persist=False)
@@ -206,7 +207,7 @@ def test_tune_sddmm_measured_and_persisted(tmp_path):
     assert choice.variant in autotune.variant_names("sddmm")
     assert choice.source == "measured"
     assert timings
-    # winner lands under the v6 op=sddmm key and reloads from disk
+    # winner lands under the v7 op=sddmm key and reloads from disk
     fp = autotune.fingerprint_bcsr(a.ensure_nonempty_rows(), 16, op="sddmm")
     fresh = autotune.Autotuner(cache_path=cache)
     assert fresh.get(fp) == choice

@@ -239,4 +239,4 @@ def test_fingerprint_carries_schedule_bound():
     k0, k1 = autotune.fingerprint(meta, 64).key(), \
         autotune.fingerprint(twin, 64).key()
     assert k0 != k1
-    assert k0.startswith("v6|") and f"mb={meta.max_bpr}" in k0
+    assert k0.startswith("v7|") and f"mb={meta.max_bpr}" in k0
