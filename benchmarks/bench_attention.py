@@ -33,8 +33,6 @@ for _p in (os.path.join(_ROOT, "src"), _ROOT):
     if _p not in sys.path:  # runnable without a manual PYTHONPATH prefix
         sys.path.insert(0, _p)
 
-import time
-
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -42,6 +40,7 @@ import jax.numpy as jnp
 from repro.analysis import workspace
 from repro.kernels import autotune
 from repro.models import attention as A
+from repro.obs import metrics as obs_metrics
 
 _BLOCK = (16, 16)
 _HEAD_DIM = 64
@@ -68,13 +67,8 @@ def _dense_masked(q, k, v, mask, scale):
 
 
 def _time_fn(fn, *operands, iters=3):
-    jax.block_until_ready(fn(*operands))
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*operands))
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return obs_metrics.timeit(fn, *operands, warmup=1, iters=iters,
+                              reduce="median")
 
 
 def run(smoke: bool = True) -> dict:

@@ -29,8 +29,6 @@ for _p in (os.path.join(_ROOT, "src"), _ROOT):
     if _p not in sys.path:  # runnable without a manual PYTHONPATH prefix
         sys.path.insert(0, _p)
 
-import time
-
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -38,6 +36,7 @@ import jax.numpy as jnp
 from repro.core import bcsr as bcsr_lib
 from repro.core import topology
 from repro.kernels import autotune, ops
+from repro.obs import metrics as obs_metrics
 
 # speedup below this vs the hardcoded default fails the regression gate;
 # smoke mode (CI shared runners, interpret-mode timings) gets extra noise
@@ -54,13 +53,8 @@ def _time_config(arrays, meta, b, variant, bn, iters=3):
     backend = autotune.get_variant(variant).backend
     fn = jax.jit(lambda bb: ops.spmm(arrays, meta, bb, backend=backend,
                                      bn=bn, interpret=True))
-    jax.block_until_ready(fn(b))  # warmup/compile
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(b))
-        ts.append(time.perf_counter() - t0)
-    return float(np.min(ts))  # min: scheduler noise only ever adds time
+    # min: scheduler noise only ever adds time
+    return obs_metrics.timeit(fn, b, warmup=1, iters=iters, reduce="min")
 
 
 def _cases(smoke: bool):

@@ -46,6 +46,7 @@ import jax.numpy as jnp
 from repro.core import bcsr as bcsr_lib
 from repro.core import native, permute, reorder, topology
 from repro.kernels import ops
+from repro.obs import metrics as obs_metrics
 
 BLOCK = (16, 16)
 TAU = 0.7
@@ -85,13 +86,7 @@ def _time_spmm(a: bcsr_lib.BCSR, reorder_scheme: str, n: int,
     b = jnp.asarray(np.random.default_rng(0).standard_normal(
         (meta.shape[1], n)).astype(np.float32))
     fn = jax.jit(lambda bb: ops.spmm(arrays, meta, bb, backend="xla"))
-    jax.block_until_ready(fn(b))
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(b))
-        ts.append(time.perf_counter() - t0)
-    return float(np.min(ts))
+    return obs_metrics.timeit(fn, b, warmup=1, iters=iters, reduce="min")
 
 
 def run(smoke: bool = True) -> dict:
@@ -100,14 +95,12 @@ def run(smoke: bool = True) -> dict:
         a = bcsr_lib.from_scipy(csr, BLOCK)
         base = a.nnzb
         # fast clustering (min of 3: the permutation is deterministic)
-        ts_fast = []
-        for _ in range(3):
-            t0 = time.perf_counter()
-            p_fast = permute.jaccard_rows_fast(
-                csr, block_w=BLOCK[1], tau=TAU,
-                max_candidates=MAX_CANDIDATES)
-            ts_fast.append(time.perf_counter() - t0)
-        t_fast = min(ts_fast)
+        p_fast = permute.jaccard_rows_fast(
+            csr, block_w=BLOCK[1], tau=TAU, max_candidates=MAX_CANDIDATES)
+        t_fast = obs_metrics.timeit(
+            permute.jaccard_rows_fast, csr, warmup=0, iters=3,
+            reduce="min", block_w=BLOCK[1], tau=TAU,
+            max_candidates=MAX_CANDIDATES)
         nnzb_fast = bcsr_lib.from_scipy(
             reorder.apply_perm(csr, p_fast), BLOCK).nnzb
         # offline reference (one run: it is the slow side being replaced)

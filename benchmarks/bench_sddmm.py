@@ -29,8 +29,6 @@ for _p in (os.path.join(_ROOT, "src"), _ROOT):
     if _p not in sys.path:  # runnable without a manual PYTHONPATH prefix
         sys.path.insert(0, _p)
 
-import time
-
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -38,6 +36,7 @@ import jax.numpy as jnp
 from repro.core import bcsr as bcsr_lib
 from repro.kernels import autotune, ops
 from repro.models import attention as A
+from repro.obs import metrics as obs_metrics
 
 
 def _cases(smoke: bool):
@@ -65,13 +64,8 @@ def _time_config(arrays, meta, x, y, variant, bn, iters=3):
     fn = jax.jit(lambda xx, yy: ops.sddmm(arrays, meta, xx, yy,
                                           backend=backend, bn=bn,
                                           interpret=True))
-    jax.block_until_ready(fn(x, y))
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(x, y))
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return obs_metrics.timeit(fn, x, y, warmup=1, iters=iters,
+                              reduce="median")
 
 
 def run(smoke: bool = True, cache_path=None) -> dict:

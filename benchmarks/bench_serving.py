@@ -12,9 +12,12 @@ regression-diff step:
 
 Gate policy (README ## Benchmarks): the DETERMINISTIC fields gate hard —
 the full scheduler trace (admit/finish events with step, slot, reuse),
-prefix-cache hit counts, the greedy token-stream checksum, per-request
-latency in STEPS (p50/p99), and the paged-KV accounting (page counts,
-pages touched per step, resident bytes).  All of these are pure
+its ``serve.*`` obs-event view (deterministic fields + checksum — the
+same decisions through ``repro.obs``; a baseline match IS the
+two-identical-runs bitwise-stability gate), prefix-cache hit counts,
+the greedy token-stream checksum, per-request latency in STEPS
+(p50/p99), and the paged-KV accounting (page counts, pages touched per
+step, resident bytes).  All of these are pure
 functions of the seeded trace, so any drift is a real behavior change.
 Wall-clock tokens/sec and millisecond latencies are REPORT-ONLY:
 interpret-mode timings on shared runners are not falsifiable.  Refresh
@@ -39,6 +42,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import attention as A
 from repro.models import transformer as T
+from repro.obs import export as obs_export
+from repro.obs import trace as obs_trace
 from repro.serve.engine import Request, ServeEngine
 
 _VOCAB = 97
@@ -83,17 +88,23 @@ def run(smoke: bool = True) -> dict:
     arrived_at, finished_at, tokens = {}, {}, {}
     t0 = time.perf_counter()
     step = 0
-    while pending or engine.scheduler.has_work():
-        while pending and pending[0][0] <= step:
-            _, req = pending.pop(0)
-            arrived_at[req.rid] = step
-            engine.enqueue(req)
-        for rid, tok in engine.step():
-            tokens.setdefault(rid, []).append(tok)
-            if len(tokens[rid]) == max_new:
-                finished_at[rid] = step
-        step += 1
+    with obs_trace.capture() as cap:
+        while pending or engine.scheduler.has_work():
+            while pending and pending[0][0] <= step:
+                _, req = pending.pop(0)
+                arrived_at[req.rid] = step
+                engine.enqueue(req)
+            for rid, tok in engine.step():
+                tokens.setdefault(rid, []).append(tok)
+                if len(tokens[rid]) == max_new:
+                    finished_at[rid] = step
+            step += 1
     wall_s = time.perf_counter() - t0
+    # the serve.* slice of the obs stream, deterministic fields only:
+    # (kind, name, args) — seq/span ids shift with unrelated events (e.g.
+    # first-trace autotune picks), so they stay out of the gate
+    serve_events = obs_export.deterministic_events(
+        cap.events, prefix="serve.", fields=("kind", "name", "args"))
 
     total_tokens = sum(len(t) for t in tokens.values())
     latency = np.asarray(sorted(finished_at[r] - arrived_at[r]
@@ -115,6 +126,11 @@ def run(smoke: bool = True) -> dict:
         "prefix_tokens_reused": engine.scheduler.prefix_tokens_reused,
         "latency_steps_p50": float(np.percentile(latency, 50)),
         "latency_steps_p99": float(np.percentile(latency, 99)),
+        # the scheduler's obs-event view of the same decisions (PR 10:
+        # one emitter, two views) — a committed-baseline diff of these IS
+        # the two-identical-runs bitwise-stability gate
+        "obs_serve_events": serve_events,
+        "obs_serve_checksum": obs_export.checksum(serve_events),
         "paged_kv": {
             "resident_page_counts": kv_rep["resident_page_counts"],
             "resident_bytes_total": kv_rep["resident_bytes_total"],
@@ -145,7 +161,7 @@ def run(smoke: bool = True) -> dict:
 _GATED = ("n_requests", "max_new_tokens", "total_tokens", "token_checksum",
           "engine_steps", "scheduler_trace", "prefix_hits",
           "prefix_tokens_reused", "latency_steps_p50", "latency_steps_p99",
-          "paged_kv")
+          "paged_kv", "obs_serve_events", "obs_serve_checksum")
 
 
 def diff(result: dict, baseline: dict) -> int:

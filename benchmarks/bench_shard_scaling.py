@@ -45,8 +45,6 @@ for _p in (os.path.join(_ROOT, "src"), _ROOT):
     if _p not in sys.path:  # runnable without a manual PYTHONPATH prefix
         sys.path.insert(0, _p)
 
-import time
-
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -55,6 +53,7 @@ from repro.core import bcsr as bcsr_lib
 from repro.core import topology
 from repro.kernels import ops
 from repro.launch import dist_spmm
+from repro.obs import metrics as obs_metrics
 
 SHARD_COUNTS = (1, 2, 4, 8)
 CHUNK_COUNTS = (1, 2, 4)
@@ -77,13 +76,7 @@ def _cases(smoke: bool):
 
 
 def _time(fn, b, iters=3):
-    jax.block_until_ready(fn(b))
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(b))
-        ts.append(time.perf_counter() - t0)
-    return float(np.min(ts))
+    return obs_metrics.timeit(fn, b, warmup=1, iters=iters, reduce="min")
 
 
 def _overlap_sweep(smoke: bool, n: int) -> list:

@@ -10,28 +10,20 @@ Matrix sizes are scaled ~4-8x down from the paper's (single CPU core).
 """
 from __future__ import annotations
 
-import time
-from typing import Callable
-
-import jax
-import numpy as np
+from typing import Callable, Optional
 
 from repro.core import bcsr as bcsr_lib
 from repro.core import perf_model as pm
+from repro.obs import metrics as obs_metrics
 
 
-def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
-    """Median wall-clock seconds of fn(*args) (jax arrays blocked)."""
-    for _ in range(warmup):
-        r = fn(*args)
-        jax.block_until_ready(r)
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        r = fn(*args)
-        jax.block_until_ready(r)
-        times.append(time.perf_counter() - t0)
-    return float(np.median(times))
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 5,
+           reduce: str = "median", name: Optional[str] = None) -> float:
+    """Wall-clock seconds of fn(*args) (jax arrays blocked) — delegates
+    to ``repro.obs.metrics.timeit``, THE timing loop shared by every
+    benchmark (the per-file copies were consolidated onto it)."""
+    return obs_metrics.timeit(fn, *args, warmup=warmup, iters=iters,
+                              reduce=reduce, name=name)
 
 
 def modeled_bcsr_time(a: bcsr_lib.BCSR, n: int) -> float:

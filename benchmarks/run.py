@@ -58,21 +58,35 @@ FIGURES = ("bench_perf_model", "bench_reorder", "bench_suitesparse_like",
 
 def run_suite(smoke: bool, diff_all: bool, out_dir: str = ".") -> int:
     import importlib
+
+    from repro.obs import export as obs_export
+    from repro.obs import trace as obs_trace
+
     rc = 0
-    for mod_name, baseline_name in SUITE:
-        mod = importlib.import_module(f"benchmarks.{mod_name}")
-        short = mod_name.replace("bench_", "")
-        print(f"# === {short} ===", file=sys.stderr)
-        result = mod.run(smoke)
-        out_path = os.path.join(out_dir, f"BENCH_{short}.json")
-        with open(out_path, "w") as f:
-            json.dump(result, f, indent=1, sort_keys=True)
-        print(f"wrote {out_path}", file=sys.stderr)
-        if diff_all:
-            baseline_path = os.path.join(_HERE, baseline_name)
-            with open(baseline_path) as f:
-                baseline = json.load(f)
-            rc |= mod.diff(result, baseline)
+    # the runner is an obs consumer: every suite module runs under a span
+    # and the whole run exports a Perfetto trace next to the BENCH_*.json
+    # artifacts (same glob, so CI uploads it for free)
+    with obs_trace.capture() as cap:
+        for mod_name, baseline_name in SUITE:
+            mod = importlib.import_module(f"benchmarks.{mod_name}")
+            short = mod_name.replace("bench_", "")
+            print(f"# === {short} ===", file=sys.stderr)
+            with obs_trace.span(f"bench.{short}", smoke=smoke):
+                result = mod.run(smoke)
+            out_path = os.path.join(out_dir, f"BENCH_{short}.json")
+            with open(out_path, "w") as f:
+                json.dump(result, f, indent=1, sort_keys=True)
+            print(f"wrote {out_path}", file=sys.stderr)
+            if diff_all:
+                baseline_path = os.path.join(_HERE, baseline_name)
+                with open(baseline_path) as f:
+                    baseline = json.load(f)
+                rc |= mod.diff(result, baseline)
+    perfetto_path = os.path.join(out_dir, "BENCH_trace_perfetto.json")
+    obs_export.write_perfetto(cap.events, perfetto_path)
+    print(f"wrote {perfetto_path} ({len(cap.events)} events)",
+          file=sys.stderr)
+    print(obs_export.summary_tree(cap.events), file=sys.stderr)
     return rc
 
 

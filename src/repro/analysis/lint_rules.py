@@ -30,10 +30,16 @@ enforced only by convention:
   ``__all__`` (``src/repro/__init__.py``) imports and resolves on the
   live package; a stale export would break every ``import repro``
   README snippet.
+* **R7 obs-host-only** — no ``repro.obs`` call reachable (same-module
+  call graph, same BFS as R1) from a traced body: observability is
+  host-side, and an event emitted under jit either bakes its args in as
+  compile-time constants or leaks tracers into the ring buffer.
+  ``repro.obs.jaxmon`` is exempt (its wrappers are trace-time-safe by
+  design — that is their whole job), as are the obs modules themselves.
 
-``lint_source`` runs R1-R4 on one module; ``lint_tree`` runs everything
-(R5 needs ops.py + autotune.py together; R6 runs when the tree has a
-``repro/__init__.py``) and is what the CLI gates CI on.
+``lint_source`` runs R1-R4 and R7 on one module; ``lint_tree`` runs
+everything (R5 needs ops.py + autotune.py together; R6 runs when the
+tree has a ``repro/__init__.py``) and is what the CLI gates CI on.
 
 >>> fs = lint_source("import functools\\n"
 ...                  "@functools.lru_cache(maxsize=None)\\n"
@@ -50,7 +56,8 @@ import re
 from repro.analysis.report import Finding
 
 RULES = ("traced-numpy", "lru-cache-static", "custom-vjp-pairing",
-         "static-aux-frozen", "fingerprint-fields", "package-facade")
+         "static-aux-frozen", "fingerprint-fields", "package-facade",
+         "obs-host-only")
 
 # dataclasses with these name suffixes are static aux: jit static args,
 # scan carries' hashable halves, cache keys
@@ -253,6 +260,77 @@ def _rule_traced_numpy(mod: _Module) -> list:
                     node.func.id in mod.funcs:
                 target = mod.funcs[node.func.id]
                 if not _is_lru(target):
+                    queue.append(node.func.id)
+    return findings
+
+
+def _obs_import_map(tree: ast.Module) -> dict:
+    """Local name -> fully dotted ``repro.obs...`` origin, covering every
+    binding form: ``import repro.obs.trace as t``, ``from repro import
+    obs``, ``from repro.obs import trace as obs_trace``, and direct
+    function imports (``from repro.obs.trace import span``).  A bare
+    ``import repro.obs.trace`` binds ``repro`` and is caught by the
+    raw-prefix check in the rule instead."""
+    out = {}
+    for n in ast.walk(tree):
+        if isinstance(n, ast.Import):
+            for alias in n.names:
+                if alias.asname and (alias.name == "repro.obs"
+                                     or alias.name.startswith("repro.obs.")):
+                    out[alias.asname] = alias.name
+        elif isinstance(n, ast.ImportFrom) and n.module and n.level == 0:
+            for alias in n.names:
+                full = f"{n.module}.{alias.name}"
+                if full == "repro.obs" or full.startswith("repro.obs."):
+                    out[alias.asname or alias.name] = full
+    return out
+
+
+def _rule_obs_host_only(mod: _Module) -> list:
+    """R7: same reachability BFS as R1, flagging ``repro.obs`` calls.
+
+    jaxmon is exempt (any resolved path with a ``jaxmon`` segment), and
+    the obs package itself is skipped — its modules call each other."""
+    if "repro/obs" in mod.path.replace(os.sep, "/"):
+        return []
+    obs_map = _obs_import_map(mod.tree)
+    findings = []
+    primals = mod.custom_vjp_primals()
+    regs = mod.defvjp_regs()
+    roots = set(primals) | mod.pallas_kernels()
+    for primal, (fwd, bwd, _) in regs.items():
+        roots |= {n for n in (fwd, bwd) if n}
+    seen, queue = set(), [r for r in roots if r in mod.funcs]
+    while queue:
+        fname = queue.pop()
+        if fname in seen:
+            continue
+        seen.add(fname)
+        fd = mod.funcs[fname]
+        for node in ast.walk(fd):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = _dotted(node.func)
+            if not callee:
+                continue
+            head = callee.split(".")[0]
+            if callee == "repro.obs" or callee.startswith("repro.obs."):
+                resolved = callee
+            elif head in obs_map:
+                resolved = obs_map[head] + callee[len(head):]
+            else:
+                resolved = None
+            if resolved is not None:
+                if "jaxmon" not in resolved.split("."):
+                    findings.append(Finding(
+                        "obs-host-only", mod.path, node.lineno,
+                        f"obs call `{callee}` inside `{fname}`, which is "
+                        "reachable from a traced body (custom_vjp / Pallas "
+                        "kernel); observability is host-side — emit the "
+                        "event outside the traced region"))
+            elif isinstance(node.func, ast.Name) and \
+                    node.func.id in mod.funcs:
+                if not _is_lru(mod.funcs[node.func.id]):
                     queue.append(node.func.id)
     return findings
 
@@ -477,10 +555,11 @@ def check_package_facade(init_path: str, package: str = "repro") -> list:
 
 # ------------------------------------------------------------- entrypoints
 def lint_source(text: str, path: str = "<source>") -> list:
-    """R1-R4 on one module's source text."""
+    """R1-R4 and R7 on one module's source text."""
     mod = _Module(ast.parse(text), path)
     return (_rule_traced_numpy(mod) + _rule_lru_static(mod)
-            + _rule_custom_vjp(mod) + _rule_static_aux(mod))
+            + _rule_custom_vjp(mod) + _rule_static_aux(mod)
+            + _rule_obs_host_only(mod))
 
 
 def lint_file(path: str) -> list:

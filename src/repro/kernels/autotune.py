@@ -36,6 +36,8 @@ import jax.numpy as jnp
 from repro.core import bcsr as bcsr_lib
 from repro.core import perf_model as pm
 from repro.kernels import ops
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 # hardcoded pre-registry default — the baseline every pick must beat
 DEFAULT_VARIANT = "nnz_stream"
@@ -585,6 +587,10 @@ class Autotuner:
         fp = fingerprint(meta, n, op=op, n_chunks=n_chunks)
         hit = self.get_shards(fp, max_shards)
         if hit is not None:
+            obs_trace.event("autotune.pick_shards", key=fp.key(),
+                            max_shards=max_shards, n_shards=hit.n_shards,
+                            source=hit.source, cache_hit=True)
+            obs_metrics.counter("autotune.cache_hit", kind="shards").inc()
             return hit
         choice = analytic_shard_choice(meta, n, max_shards=max_shards,
                                        n_chunks=n_chunks, op=op)
@@ -592,6 +598,10 @@ class Autotuner:
         # recompute and may run inside first-trace paths (same policy as
         # pick())
         self._shards[shard_entry_key(fp, max_shards)] = choice
+        obs_trace.event("autotune.pick_shards", key=fp.key(),
+                        max_shards=max_shards, n_shards=choice.n_shards,
+                        source=choice.source, cache_hit=False)
+        obs_metrics.counter("autotune.cache_miss", kind="shards").inc()
         return choice
 
     def __len__(self) -> int:
@@ -606,11 +616,19 @@ class Autotuner:
         fp = fingerprint(meta, n, op=op)
         hit = self.get(fp)
         if hit is not None:
+            obs_trace.event("autotune.pick", key=fp.key(), op=op,
+                            variant=hit.variant, bn=hit.bn,
+                            source=hit.source, cache_hit=True)
+            obs_metrics.counter("autotune.cache_hit", op=op).inc()
             return hit
         choice = analytic_choice(meta, n, op=op)
         # cache (no disk write: analytic picks are cheap to recompute and
         # pick() may run inside latency-sensitive first-trace paths)
         self.put(fp, choice, persist=False)
+        obs_trace.event("autotune.pick", key=fp.key(), op=op,
+                        variant=choice.variant, bn=choice.bn,
+                        source=choice.source, cache_hit=False)
+        obs_metrics.counter("autotune.cache_miss", op=op).inc()
         return choice
 
     # ------------------------------------------------------------- tuning
@@ -674,20 +692,22 @@ class Autotuner:
         cand.setdefault(f"{dv}/bn{DEFAULT_BN}", (dv, DEFAULT_BN))
 
         timings: Dict[str, float] = {}
-        for label, (name, bn) in cand.items():
-            fn = _mk_fn(get_variant(name).backend, bn)
-            try:
-                jax.block_until_ready(fn(*operands))
-                for _ in range(max(warmup - 1, 0)):
+        with obs_trace.span("autotune.tune", key=fp.key(), op=op,
+                            n_candidates=len(cand)):
+            for label, (name, bn) in cand.items():
+                fn = _mk_fn(get_variant(name).backend, bn)
+                try:
                     jax.block_until_ready(fn(*operands))
-                ts = []
-                for _ in range(iters):
-                    t0 = time.perf_counter()
-                    jax.block_until_ready(fn(*operands))
-                    ts.append(time.perf_counter() - t0)
-                timings[label] = float(np.median(ts))
-            except Exception:  # variant not runnable here — skip, don't die
-                continue
+                    for _ in range(max(warmup - 1, 0)):
+                        jax.block_until_ready(fn(*operands))
+                    ts = []
+                    for _ in range(iters):
+                        t0 = time.perf_counter()
+                        jax.block_until_ready(fn(*operands))
+                        ts.append(time.perf_counter() - t0)
+                    timings[label] = float(np.median(ts))
+                except Exception:  # variant not runnable — skip, don't die
+                    continue
 
         default_label = f"{dv}/bn{DEFAULT_BN}"
         if not timings:
@@ -702,6 +722,10 @@ class Autotuner:
             choice = KernelChoice(name, bn, source="measured",
                                   predicted_us=timings[best_label] * 1e6)
         self.put(fp, choice, persist=True)
+        obs_trace.event("autotune.tuned", key=fp.key(), op=op,
+                        variant=choice.variant, bn=choice.bn,
+                        n_candidates=len(timings))
+        obs_metrics.counter("autotune.tuned", op=op).inc()
         return choice, timings
 
 

@@ -124,35 +124,45 @@ def _prepare_sparse_host(a: bcsr_lib.BCSR, *, reorder: str,
     to device, ``prepare_sparse_meta`` keeps only the meta (the static
     structure-metadata pipeline the model layers dispatch on)."""
     from repro.core import permute as permute_lib  # local: import cycle
-    a, row_perm_np = permute_lib.permute_bcsr(
-        a, reorder, tau=tau, max_candidates=max_candidates,
-        n_shards=n_shards, granularity=reorder_granularity)
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
+    nnzb_in = a.nnzb
+    with obs_trace.span("prepare.reorder", scheme=reorder,
+                        granularity=reorder_granularity):
+        a, row_perm_np = permute_lib.permute_bcsr(
+            a, reorder, tau=tau, max_candidates=max_candidates,
+            n_shards=n_shards, granularity=reorder_granularity)
+    if nnzb_in:
+        obs_metrics.gauge("prepare.nnzb_reduction_pct", scheme=reorder).set(
+            round(100.0 * (nnzb_in - a.nnzb) / nnzb_in, 2))
     # padding entries are tagged explicitly by ensure_nonempty_rows (before
     # its lexsort), so genuinely-zero original blocks — e.g. from
     # random_bcsr(fill_density<1) — keep real_mask=True and stay trainable.
-    a_p, real_mask = a.ensure_nonempty_rows(return_mask=True)
+    with obs_trace.span("prepare.meta"):
+        a_p, real_mask = a.ensure_nonempty_rows(return_mask=True)
 
-    # ---- transpose structure (entries of A^T in row-major order of A^T) ----
-    order = np.lexsort((a_p.row_ids, a_p.col_ids))
-    t_perm = order.astype(np.int32)
-    t_row_ids = a_p.col_ids[order].astype(np.int32)
-    t_col_ids = a_p.row_ids[order].astype(np.int32)
-    # pad A^T's empty block-rows with the sentinel zero block (index nnzb)
-    n_brows_t = a_p.n_block_cols
-    present = np.zeros(n_brows_t, dtype=bool)
-    present[t_row_ids] = True
-    empty = np.flatnonzero(~present).astype(np.int32)
-    if empty.size:
-        t_perm = np.concatenate([t_perm,
-                                 np.full(empty.size, a_p.nnzb, np.int32)])
-        t_row_ids = np.concatenate([t_row_ids, empty])
-        t_col_ids = np.concatenate([t_col_ids,
-                                    np.zeros(empty.size, np.int32)])
-        order_t = np.lexsort((t_col_ids, t_row_ids))
-        t_perm, t_row_ids, t_col_ids = (t_perm[order_t], t_row_ids[order_t],
-                                        t_col_ids[order_t])
+        # ---- transpose structure (entries of A^T in A^T row-major order) --
+        order = np.lexsort((a_p.row_ids, a_p.col_ids))
+        t_perm = order.astype(np.int32)
+        t_row_ids = a_p.col_ids[order].astype(np.int32)
+        t_col_ids = a_p.row_ids[order].astype(np.int32)
+        # pad A^T's empty block-rows with the sentinel zero block (index
+        # nnzb)
+        n_brows_t = a_p.n_block_cols
+        present = np.zeros(n_brows_t, dtype=bool)
+        present[t_row_ids] = True
+        empty = np.flatnonzero(~present).astype(np.int32)
+        if empty.size:
+            t_perm = np.concatenate(
+                [t_perm, np.full(empty.size, a_p.nnzb, np.int32)])
+            t_row_ids = np.concatenate([t_row_ids, empty])
+            t_col_ids = np.concatenate([t_col_ids,
+                                        np.zeros(empty.size, np.int32)])
+            order_t = np.lexsort((t_col_ids, t_row_ids))
+            t_perm, t_row_ids, t_col_ids = (
+                t_perm[order_t], t_row_ids[order_t], t_col_ids[order_t])
 
-    inv_perm_np = permute_lib.invert_perm(row_perm_np)
+        inv_perm_np = permute_lib.invert_perm(row_perm_np)
     host = {
         "vals": a_p.vals,
         "row_ids": a_p.row_ids,
@@ -171,6 +181,10 @@ def _prepare_sparse_host(a: bcsr_lib.BCSR, *, reorder: str,
                       nnzb=a_p.nnzb, nnzb_t=int(t_row_ids.shape[0]),
                       max_bpr=max_bpr, padding_ratio_pct=pad_pct,
                       bpr_cv_pct=cv_pct, reorder=reorder)
+    obs_trace.event("prepare.done", shape=meta.shape, block=meta.block,
+                    nnzb=meta.nnzb, nnzb_t=meta.nnzb_t,
+                    max_bpr=meta.max_bpr, reorder=reorder)
+    obs_metrics.gauge("prepare.nnzb", scheme=reorder).set(meta.nnzb)
     return host, meta
 
 
@@ -565,6 +579,13 @@ def resolve_backend(backend: str, bn: int, meta: SparseMeta,
         # capacity, and the VMEM budget, all symbolic (repro.analysis)
         from repro.analysis import verify_launch as _verify_launch
         _verify_launch.assert_launch_ok(meta, backend, n=n, bn=bn, op=op)
+    # host-side dispatch record (static info only, so trace-time safe —
+    # same argument as the `auto` resolution above)
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
+    obs_trace.event("ops.dispatch", op=op, backend=backend, bn=bn, n=n,
+                    nnzb=meta.nnzb, max_bpr=meta.max_bpr)
+    obs_metrics.counter("ops.dispatch", op=op, backend=backend).inc()
     return backend, bn
 
 

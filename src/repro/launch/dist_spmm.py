@@ -76,6 +76,9 @@ from repro.core import bcsr as bcsr_lib
 from repro.core import permute as permute_lib
 from repro.kernels import ops
 from repro.launch import mesh as mesh_lib
+from repro.obs import jaxmon
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 AXIS_ROW = "spmm"        # mesh axis the block-row partition maps onto
 AXIS_COL = "spmm_col"    # optional 2D axis: column split over B
@@ -298,6 +301,7 @@ def _local_stats(rows: np.ndarray, vals_real: np.ndarray, rps: int,
             int(round(cv * 100)))
 
 
+@obs_trace.spanned("prepare.shard")
 def _prepare_sharded_host(a: bcsr_lib.BCSR, n_shards, *,
                           col_shards: int = 1,
                           reorder: str = "identity", tau: float = 0.7,
@@ -329,9 +333,10 @@ def _prepare_sharded_host(a: bcsr_lib.BCSR, n_shards, *,
     M, K = a.shape
     pre_perm = np.arange(M, dtype=np.int64)
     if reorder not in ("identity", "shard_balance"):
-        a, pre_perm = permute_lib.permute_bcsr(
-            a, reorder, tau=tau, max_candidates=max_candidates,
-            n_shards=n_shards, granularity="block_row")
+        with obs_trace.span("prepare.shard.reorder", scheme=reorder):
+            a, pre_perm = permute_lib.permute_bcsr(
+                a, reorder, tau=tau, max_candidates=max_candidates,
+                n_shards=n_shards, granularity="block_row")
     a_p, real_g = a.ensure_nonempty_rows(return_mask=True)
     nbr, nbc = a_p.n_block_rows, a_p.n_block_cols
     rowptr = a_p.rowptr
@@ -359,9 +364,11 @@ def _prepare_sharded_host(a: bcsr_lib.BCSR, n_shards, *,
         assign = permute_lib.shard_bins(frag_len, n_shards,
                                         rows_per_shard=rps)
         shard_units = [np.flatnonzero(assign == s) for s in range(n_shards)]
+        shard_loads = np.asarray([int(frag_len[u].sum())
+                                  for u in shard_units], np.int64)
         unit_row, unit_start, unit_len = frag_row, frag_start, frag_len
     else:
-        assign, shard_units, _, rps = plan_shards(
+        assign, shard_units, shard_loads, rps = plan_shards(
             a_p, n_shards, rows_per_shard=rows_per_shard,
             nnzb_per_shard=nnzb_per_shard)
         if rps * n_shards < nbr:
@@ -370,6 +377,17 @@ def _prepare_sharded_host(a: bcsr_lib.BCSR, n_shards, *,
         unit_row = np.arange(nbr, dtype=np.int64)
         unit_start = np.zeros(nbr, np.int64)
         unit_len = bpr.astype(np.int64)
+
+    # per-shard balance record: the LPT's real loads, before padding
+    # equalizes the static shapes (obs gauges feed the dryrun/bench views)
+    mean_load = float(shard_loads.mean()) if shard_loads.size else 0.0
+    imbalance = (round(float(shard_loads.max()) / mean_load, 3)
+                 if mean_load > 0 else 1.0)
+    obs_trace.event("dist.shard_balance", n_shards=n_shards,
+                    loads=shard_loads, imbalance=imbalance,
+                    split_heavy_rows=bool(split_heavy_rows))
+    obs_metrics.gauge("dist.shard_imbalance", n_shards=n_shards).set(
+        imbalance)
 
     # per-shard entry lists (entries stay in a_p's global order; local ids
     # relabel planning units — block-rows, or fragments of them — to each
@@ -663,6 +681,7 @@ def _branch_meta(smeta: ShardedMeta, members) -> ops.SparseMeta:
         first, max_bpr=max(smeta.shard_metas[i].max_bpr for i in members))
 
 
+@jaxmon.monitor(name="launch.spmm_sharded")
 def spmm_sharded(arrays: ShardedArrays, smeta: ShardedMeta, b: jnp.ndarray,
                  *, backend: str = "auto", bn: int = 512,
                  interpret: bool = False, mesh=None,
@@ -708,6 +727,13 @@ def spmm_sharded(arrays: ShardedArrays, smeta: ShardedMeta, b: jnp.ndarray,
     ...                   atol=1e-4))
     True
     """
+    if obs_trace.enabled():
+        n = int(b.shape[-1])
+        sched = chunk_schedule(n, n_chunks)
+        obs_trace.event("dist.chunk_schedule", n=n, n_chunks=len(sched),
+                        n_shards=smeta.n_shards, backend=backend,
+                        schedule=sched)
+    obs_metrics.gauge("dist.n_chunks").set(n_chunks)
     if n_chunks > 1:
         kw = dict(backend=backend, bn=bn, interpret=interpret, mesh=mesh,
                   out_dtype=out_dtype)

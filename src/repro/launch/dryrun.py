@@ -34,6 +34,8 @@ from repro.launch import roofline as rl
 from repro.launch import sharding as sh
 from repro.launch import steps as st
 from repro.models import transformer as T
+from repro.obs import export as obs_export
+from repro.obs import trace as obs_trace
 from repro.optim import adamw
 
 
@@ -356,7 +358,8 @@ def main(argv=None):
     records = []
     for a in archs:
         cfg = get_config(a)
-        shard_rep = sparse_shard_report(cfg)
+        with obs_trace.span("dryrun.shard_report", arch=cfg.name):
+            shard_rep = sparse_shard_report(cfg)
         if shard_rep:
             for lname, r in shard_rep.items():
                 print(f"[dryrun] {cfg.name} sparse shard balance [{lname}]: "
@@ -366,7 +369,8 @@ def main(argv=None):
                       f"auto picks {r['auto_picks']}")
             records.append({"arch": cfg.name, "status": "sparse_shards",
                             "sparse_shards": shard_rep})
-        attn_rep = sparse_attention_report(cfg)
+        with obs_trace.span("dryrun.attention_report", arch=cfg.name):
+            attn_rep = sparse_attention_report(cfg)
         if attn_rep:
             print(f"[dryrun] {cfg.name} sparse attention mask: "
                   f"{attn_rep['mask']['kind']} nnzb={attn_rep['nnzb']} "
@@ -378,7 +382,8 @@ def main(argv=None):
                   f"spmm={attn_rep['spmm_pick']}")
             records.append({"arch": cfg.name, "status": "sparse_attention",
                             "sparse_attention": attn_rep})
-        kv_rep = paged_kv_report(cfg)
+        with obs_trace.span("dryrun.paged_kv_report", arch=cfg.name):
+            kv_rep = paged_kv_report(cfg)
         if kv_rep:
             for g in kv_rep["groups"]:
                 extra = ("" if not g.get("paged") else
@@ -407,10 +412,12 @@ def main(argv=None):
                 print(f"[dryrun] SKIP {cfg.name} x {cell.name}: {why}")
                 continue
             try:
-                records.append(run_cell(
-                    cfg, cell, mesh, remat=args.remat,
-                    seq_shard_long=not args.no_seq_shard_long,
-                    extrapolate=not args.no_extrapolate))
+                with obs_trace.span("dryrun.cell", arch=cfg.name,
+                                    shape=cell.name):
+                    records.append(run_cell(
+                        cfg, cell, mesh, remat=args.remat,
+                        seq_shard_long=not args.no_seq_shard_long,
+                        extrapolate=not args.no_extrapolate))
             except Exception as e:  # noqa
                 traceback.print_exc()
                 records.append({"arch": cfg.name, "shape": cell.name,
@@ -420,6 +427,9 @@ def main(argv=None):
         with open(args.out, "w") as f:
             json.dump(records, f, indent=1)
         print(f"[dryrun] wrote {len(records)} records -> {args.out}")
+    if obs_trace.enabled():
+        print("[dryrun] trace summary:")
+        print(obs_export.summary_tree(obs_trace.get_events()))
     n_err = sum(r["status"] == "error" for r in records)
     return 1 if n_err else 0
 

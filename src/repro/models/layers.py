@@ -31,6 +31,7 @@ from repro.core.sparse_linear import (apply_sparse_linear,
                                       merge_sparse_metas,
                                       sparse_linear_meta)
 from repro.models import unroll as U
+from repro.obs import jaxmon
 
 # chunk size for q-blocked (flash-style, O(L*chunk) memory) attention
 Q_CHUNK = 1024
@@ -158,6 +159,7 @@ def _decode_pages(cfg, window, cache_len):
     return pages, live
 
 
+@jaxmon.monitor(name="models.paged_decode")
 def _paged_decode(cfg, q, kc, vc, pos, window, cap, scale, *,
                   pages, live):
     """One-token decode attention reading KV through the mask page table

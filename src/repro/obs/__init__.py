@@ -1,0 +1,30 @@
+"""Whole-stack observability (PR 10): structured tracing, a metrics
+registry, and a retrace sentinel.
+
+Host-side and deterministic-friendly by construction:
+
+* ``repro.obs.trace``   — hierarchical spans + events, ring buffer,
+  ``REPRO_TRACE=0/1/<jsonl-path>`` gating (zero-cost when off);
+* ``repro.obs.metrics`` — process-wide counters/gauges/histograms with
+  labeled series, ``snapshot()``/``reset()``, and the shared benchmark
+  ``timeit`` loop;
+* ``repro.obs.export``  — JSONL / Perfetto ``trace_event`` / summary-tree
+  views with deterministic payloads split from report-only wall clock;
+* ``repro.obs.jaxmon``  — retrace sentinel (``monitor`` +
+  ``assert_max_traces``) turning "never retraces" comments into CI gates.
+
+The obs core never imports jax (``jaxmon``/``timeit`` import it lazily),
+so pure-host modules like ``serve.scheduler`` can emit events freely.
+Lint R7 (``analysis.lint_rules``) keeps every ``repro.obs`` call out of
+custom_vjp/Pallas-traced code — ``jaxmon`` excepted, trace-aware by
+design.
+"""
+from repro.obs import export, jaxmon, metrics, trace
+from repro.obs.metrics import counter, gauge, histogram, snapshot, timeit
+from repro.obs.trace import capture, enabled, event, span, spanned
+
+__all__ = [
+    "trace", "metrics", "export", "jaxmon",
+    "span", "spanned", "event", "capture", "enabled",
+    "counter", "gauge", "histogram", "snapshot", "timeit",
+]

@@ -1,0 +1,154 @@
+"""Retrace sentinel: make static-shape promises CI-enforced facts.
+
+The serving engine, the paged decode gather, and the sharded SpMM all
+promise "never retraces" in comments; this module turns that into an
+assertion.  :func:`monitor` wraps a function that jit (or grad / vmap /
+scan) will trace; the wrapper bumps a named :class:`Sentinel` ONLY when
+called under an active jax trace (``jax.core.trace_state_clean()`` is
+False) — i.e. exactly once per (re)trace per call site, and never on
+eager calls or jit cache hits.  ``assert_max_traces(target, n)`` then
+raises :class:`RetraceError` when the count exceeds the budget.
+
+Wrap the function BEFORE handing it to ``jax.jit`` (the engine does this
+for ``_masked_step``), or decorate a function that is called from inside
+traced code (``models.layers._paged_decode``,
+``launch.dist_spmm.spmm_sharded``) — for the latter, the count is "times
+the body was traced", so a function inlined L times per program counts L
+per trace; budget accordingly.
+
+This module is the one ``repro.obs`` member that is trace-time-safe by
+design (it only reads trace state and mutates host counters), so lint R7
+(``obs-host-only``) exempts it.
+
+>>> import jax, jax.numpy as jnp
+>>> @monitor(name="doc.f")
+... def f(x):
+...     return x * 2
+>>> g = jax.jit(f)
+>>> _ = g(jnp.ones((4,))); _ = g(jnp.ones((4,)))   # one trace, one hit
+>>> trace_count("doc.f")
+1
+>>> _ = g(jnp.ones((8,)))                          # new shape: retrace
+>>> assert_max_traces("doc.f", 1)   # doctest: +IGNORE_EXCEPTION_DETAIL
+Traceback (most recent call last):
+    ...
+RetraceError: doc.f: traced 2 times, budget 1
+>>> reset("doc.f")
+"""
+from __future__ import annotations
+
+import functools
+import threading
+from typing import Dict, Optional
+
+from repro.obs import trace as _trace
+
+
+class RetraceError(AssertionError):
+    """A monitored entry point traced more often than its budget."""
+
+
+class Sentinel:
+    __slots__ = ("name", "count", "_lock")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.count = 0
+        self._lock = threading.Lock()
+
+    def bump(self) -> int:
+        with self._lock:
+            self.count += 1
+            return self.count
+
+    def reset(self) -> None:
+        with self._lock:
+            self.count = 0
+
+    def __repr__(self):
+        return f"Sentinel({self.name!r}, count={self.count})"
+
+
+_REGISTRY: Dict[str, Sentinel] = {}
+_LOCK = threading.Lock()
+
+
+def _trace_active() -> bool:
+    try:
+        import jax
+        return not jax.core.trace_state_clean()
+    except ImportError:
+        return False
+
+
+def monitor(fn=None, *, name: Optional[str] = None):
+    """Decorator/wrapper installing a retrace sentinel on ``fn``.
+
+    Registers the sentinel process-wide under ``name`` (default: the
+    function's qualname; latest registration wins — each ``ServeEngine``
+    re-registers ``serve.masked_step`` for its own closure).  The
+    sentinel is also reachable as ``wrapped.sentinel``."""
+    if fn is None:
+        return functools.partial(monitor, name=name)
+    s = Sentinel(name or getattr(fn, "__qualname__", repr(fn)))
+    with _LOCK:
+        _REGISTRY[s.name] = s
+
+    @functools.wraps(fn)
+    def wrapper(*a, **kw):
+        if _trace_active():
+            n = s.bump()
+            _trace.event("jax.trace", fn=s.name, n=n)
+        return fn(*a, **kw)
+
+    wrapper.sentinel = s
+    return wrapper
+
+
+def _resolve(target) -> Sentinel:
+    if isinstance(target, Sentinel):
+        return target
+    if isinstance(target, str):
+        s = _REGISTRY.get(target)
+        if s is None:
+            known = sorted(_REGISTRY)
+            raise KeyError(f"no retrace sentinel named {target!r}; "
+                           f"registered: {known}")
+        return s
+    s = getattr(target, "sentinel", None)
+    if isinstance(s, Sentinel):
+        return s
+    raise TypeError(f"expected a sentinel name, a monitored function, or "
+                    f"a Sentinel; got {target!r}")
+
+
+def trace_count(target) -> int:
+    """How many times the monitored body has been traced so far."""
+    return _resolve(target).count
+
+
+def assert_max_traces(target, n: int) -> None:
+    """Raise :class:`RetraceError` when ``target`` traced more than ``n``
+    times — the CI gate for static-shape promises."""
+    s = _resolve(target)
+    if s.count > n:
+        raise RetraceError(
+            f"{s.name}: traced {s.count} times, budget {n} — a "
+            "static-shape promise broke (shape/dtype-polymorphic inputs "
+            "reached a jitted entry point)")
+
+
+def reset(target=None) -> None:
+    """Zero one sentinel, or every registered sentinel (test isolation)."""
+    if target is not None:
+        _resolve(target).reset()
+        return
+    with _LOCK:
+        for s in _REGISTRY.values():
+            s.reset()
+
+
+def sentinels() -> Dict[str, int]:
+    """Snapshot ``{name: trace_count}`` of every registered sentinel."""
+    with _LOCK:
+        return {name: s.count for name, s in sorted(_REGISTRY.items())}

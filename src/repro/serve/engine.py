@@ -45,6 +45,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
+from repro.obs import jaxmon
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve.scheduler import Scheduler, SchedulerConfig
 
 # decode-cache batch-axis position by leaf name (same layout conventions as
@@ -150,7 +153,12 @@ class ServeEngine:
             # inside the same traced computation
             return logits, _merge_cache(c, new_c, slot_mask)
 
-        _decode_jit = jax.jit(_masked_step, donate_argnums=(1,))
+        # retrace sentinel BEFORE jit: the wrapper body runs exactly once
+        # per trace, so "slot masks keep shapes static — never retraces"
+        # is an assertable count (CI: tests/test_obs.py)
+        _monitored = jaxmon.monitor(_masked_step, name="serve.masked_step")
+        self.step_sentinel = _monitored.sentinel
+        _decode_jit = jax.jit(_monitored, donate_argnums=(1,))
 
         def _decode(*args):
             if self.spmm_mesh is None:
@@ -210,6 +218,13 @@ class ServeEngine:
         """Admit pending requests, run one decode step for every active
         slot (one batched dispatch per position group), and return the
         tokens sampled this step as ``[(rid, token)]``."""
+        with obs_trace.span("serve.step", step=self.scheduler.step_idx):
+            produced = self._step_inner()
+        obs_metrics.counter("serve.steps").inc()
+        obs_metrics.counter("serve.tokens").inc(len(produced))
+        return produced
+
+    def _step_inner(self) -> List[Tuple[int, object]]:
         for adm in self.scheduler.admit():
             if adm["reuse"] > 0 and adm["src"] != adm["slot"]:
                 self.cache = _copy_slot(self.cache, adm["src"], adm["slot"])

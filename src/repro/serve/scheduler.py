@@ -44,6 +44,9 @@ import dataclasses
 from collections import deque
 from typing import List, Optional
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
@@ -64,6 +67,7 @@ def _tok_key(value):
 class _Slot:
     req: object         # .rid .prompt .max_new_tokens .out_tokens
     fed: int = 0        # tokens fed through decode == KV rows written
+    admitted_step: int = 0   # step_idx at admission (latency accounting)
 
 
 class Scheduler:
@@ -80,6 +84,18 @@ class Scheduler:
         self.step_idx = 0
         self.prefix_hits = 0
         self.prefix_tokens_reused = 0
+
+    def _emit(self, event: str, **fields) -> dict:
+        """THE scheduler trace emitter (PR 10 satellite): one record, two
+        views.  The returned dict lands in ``self.trace`` — the
+        deterministic list ``bench_serving`` gates byte-for-byte — and the
+        same payload goes out as a ``serve.<event>`` obs event (spans,
+        wall-clock, exporters).  Keeping a private per-instance list means
+        the bench gate never depends on ``REPRO_TRACE``."""
+        rec = {"event": event, "step": self.step_idx, **fields}
+        self.trace.append(rec)
+        obs_trace.event(f"serve.{event}", **rec)
+        return rec
 
     # ------------------------------------------------------------- admission
     def enqueue(self, req) -> None:
@@ -125,15 +141,17 @@ class Scheduler:
                 reuse = min(reuse, len(req.prompt) - 1)
                 if reuse <= 0:
                     reuse, src = 0, -1
-            self.slots[slot] = _Slot(req=req, fed=reuse)
+            self.slots[slot] = _Slot(req=req, fed=reuse,
+                                     admitted_step=self.step_idx)
             self.written[slot] = keys[:reuse]
+            obs_metrics.counter("serve.admit").inc()
             if reuse > 0:
                 self.prefix_hits += 1
                 self.prefix_tokens_reused += reuse
-            rec = {"event": "admit", "step": self.step_idx, "rid": req.rid,
-                   "slot": slot, "reuse": reuse, "src": src}
-            self.trace.append(rec)
-            out.append(rec)
+                obs_metrics.counter("serve.prefix_hit").inc()
+                obs_metrics.counter("serve.prefix_tokens_reused").inc(reuse)
+            out.append(self._emit("admit", rid=req.rid, slot=slot,
+                                  reuse=reuse, src=src))
         return out
 
     # ------------------------------------------------------------------ step
@@ -166,9 +184,11 @@ class Scheduler:
         st = self.slots[slot]
         st.req.out_tokens.append(token)
         if len(st.req.out_tokens) >= st.req.max_new_tokens:
-            self.trace.append({"event": "finish", "step": self.step_idx,
-                               "rid": st.req.rid, "slot": slot,
-                               "n_out": len(st.req.out_tokens)})
+            self._emit("finish", rid=st.req.rid, slot=slot,
+                       n_out=len(st.req.out_tokens))
+            obs_metrics.counter("serve.finish").inc()
+            obs_metrics.histogram("serve.latency_steps").observe(
+                self.step_idx - st.admitted_step)
             self.slots[slot] = None
             return True
         return False

@@ -27,6 +27,8 @@ from repro.data.pipeline import DataConfig, make_batch
 from repro.launch import sharding as sh
 from repro.launch import steps as st
 from repro.models import transformer as T
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.optim import adamw
 
 log = logging.getLogger("repro.train")
@@ -98,11 +100,20 @@ def train(cfg: ModelConfig, shape: ShapeCell, mesh, *,
             dt = time.time() - t0
             losses.append(loss)
             times.append(dt)
+            # step/loss series: loss is deterministic for a fixed seed, so
+            # it rides in the event args; the step time is wall clock and
+            # stays in metrics (report-only histogram) + the dur field
+            obs_trace.timed_event("train.step", dt * 1e6,
+                                  step=step, loss=loss)
+            obs_metrics.counter("train.steps").inc()
+            obs_metrics.gauge("train.loss").set(loss)
+            obs_metrics.histogram("train.step_time_us").observe(dt * 1e6)
             if ewma is None:
                 ewma = dt
             else:
                 if dt > straggler_factor * ewma:
                     stragglers.append(step)
+                    obs_metrics.counter("train.stragglers").inc()
                     log.warning("straggler suspected at step %d: "
                                 "%.2fs vs EWMA %.2fs", step, dt, ewma)
                 ewma = 0.9 * ewma + 0.1 * dt
